@@ -1,0 +1,58 @@
+"""§4 — labeled GUIDs: concurrent-creation storms and the wavefront grid.
+
+Measures creator-call counts under racing ``map_get`` (must equal the map
+size — the exactly-once guarantee), message totals, and wavefront makespan
+scaling.
+"""
+import time
+
+from repro.core import (DbMode, EDT_PROP_MAPPED, NULL_GUID, Runtime,
+                        UNINITIALIZED_GUID, spawn_main)
+
+
+def _storm(size: int, gets_per_index: int, nodes: int = 6):
+    rt = Runtime(num_nodes=nodes, seed=1, jitter=2.0)
+
+    def creator(ctx, lid, index, paramv, guidv):
+        ctx.edt_create(guidv[0], paramv=[index], depv=[UNINITIALIZED_GUID],
+                       props=EDT_PROP_MAPPED)
+
+    def noop(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(noop, 1, 1)
+        m = api.map_create(size, creator, guidv=[tmpl])
+        for i in range(size):
+            for _ in range(gets_per_index):
+                api.map_get(m, i)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    return rt.run()
+
+
+def _wavefront(w: int, h: int):
+    from tests.test_core_runtime import run_wavefront
+    return run_wavefront(w, h, num_nodes=8)
+
+
+def run():
+    rows = []
+    for size, gets in ((16, 4), (64, 8), (256, 4)):
+        t0 = time.perf_counter()
+        stats = _storm(size, gets)
+        us = (time.perf_counter() - t0) / (size * gets) * 1e6
+        rows.append((
+            f"map.storm_s{size}_g{gets}", f"{us:.1f}",
+            f"creator_calls={stats.creator_calls}(expect {size});"
+            f"msgs={stats.messages_sent}"))
+    for w, h in ((4, 4), (8, 8)):
+        t0 = time.perf_counter()
+        executed, stats = _wavefront(w, h)
+        us = (time.perf_counter() - t0) / (w * h) * 1e6
+        rows.append((
+            f"map.wavefront_{w}x{h}", f"{us:.1f}",
+            f"tasks={len(executed)};makespan={stats.makespan:.0f};"
+            f"critical_path={w + h - 1}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifact (results/dryrun.json).
+
+Rows: one per (arch × shape × mesh) cell with the three terms in seconds,
+the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPS.  Run the dry-run first:
+``PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]``.
+"""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def run():
+    rows = []
+    if not os.path.exists(RESULTS):
+        return [("roofline.missing", "0", "run repro.launch.dryrun first")]
+    with open(RESULTS) as f:
+        data = json.load(f)
+    for key in sorted(data["cells"]):
+        v = data["cells"][key]
+        if v["status"] != "ok":
+            continue
+        r = v["roofline"]
+        name = "roofline." + key.replace("|", ".")
+        dom_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        us = dom_s * 1e6
+        rows.append((
+            name, f"{us:.0f}",
+            f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+            f"collective={r['collective_s']:.4f}s;dominant={r['dominant']};"
+            f"useful_ratio={r['useful_ratio']:.2f};"
+            f"tempGB={v['memory']['temp_size_in_bytes'] / 1e9:.1f}"))
+    return rows

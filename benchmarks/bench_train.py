@@ -1,0 +1,42 @@
+"""Wall-clock microbenchmarks of the step functions on reduced configs
+(CPU; the real targets are AOT artifacts — see bench_roofline)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.models.model import LanguageModel
+from repro.optim import OptimizerConfig
+from repro.train.steps import init_train_state, make_train_step
+
+
+def _bench_arch(arch: str, steps: int = 8):
+    cfg = get_config(arch).reduced()
+    model = LanguageModel(cfg)
+    oc = OptimizerConfig()
+    data = SyntheticTokens(cfg.vocab_size, batch=4, seq=64, seed=0)
+    step = jax.jit(make_train_step(model, oc), donate_argnums=(0,))
+    st = init_train_state(model, jax.random.PRNGKey(0), oc)
+    b = {k: jnp.asarray(v) for k, v in data.get(0).items()}
+    st, _ = step(st, b)                       # compile
+    jax.block_until_ready(st)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.get(i + 1).items()}
+        st, m = step(st, b)
+    jax.block_until_ready(st)
+    dt = (time.perf_counter() - t0) / steps
+    toks = 4 * 64
+    return dt * 1e6, toks / dt
+
+
+def run():
+    rows = []
+    for arch in ("smollm-360m", "mamba2-1.3b", "deepseek-v2-236b",
+                 "zamba2-1.2b"):
+        us, tps = _bench_arch(arch)
+        rows.append((f"train.step_{arch}-smoke", f"{us:.0f}",
+                     f"tokens_per_s={tps:.0f} (reduced cfg, CPU)"))
+    return rows

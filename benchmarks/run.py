@@ -1,0 +1,25 @@
+"""Benchmark driver: one section per paper extension + roofline + steps.
+
+Prints ``name,us_per_call,derived`` CSV.  §3/§4/§6 makespans are in
+deterministic virtual time (noise-free); file IO does real disk IO; the
+roofline section reads the AOT dry-run artifact.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (bench_fileio, bench_lid, bench_map,
+                            bench_partition, bench_roofline, bench_train)
+    print("name,us_per_call,derived")
+    for mod in (bench_lid, bench_map, bench_fileio, bench_partition,
+                bench_train, bench_roofline):
+        for name, us, derived in mod.run():
+            print(f"{name},{us},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a reduced LM for a few hundred steps through the
+fault-tolerant trainer, with §5 chunked checkpoints, a mid-run simulated
+node failure + restart, then greedy-decode from the trained model.
+
+Run:  PYTHONPATH=src python examples/train_lm.py            (~3 min CPU)
+"""
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import ckpt
+from repro.configs import get_config
+from repro.data import SyntheticTokens
+from repro.models.model import LanguageModel
+from repro.optim import OptimizerConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+STEPS = 240
+FAIL_AT = 150
+
+def main() -> None:
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    cfg = get_config("llama3.2-3b").reduced()
+    model = LanguageModel(cfg)
+    oc = OptimizerConfig(peak_lr=5e-3, warmup_steps=10, total_steps=STEPS,
+                         weight_decay=0.0)
+    data = SyntheticTokens(cfg.vocab_size, batch=16, seq=32, seed=11,
+                           mode="markov")
+
+    # ---- phase 1: train with periodic §5 chunked checkpoints; a simulated
+    # fail-stop kills the run at step FAIL_AT
+    tc = TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=50, async_ckpt=False,
+                       fail_at_step=FAIL_AT)
+    tr = Trainer(model, oc, data, tc)
+    state = tr.init_or_restore(jax.random.PRNGKey(0))
+    tr.run(state, STEPS)
+    print(f"run 1 died at step {max(h['step'] for h in tr.history)} "
+          f"(injected failure); last committed ckpt = "
+          f"step_{ckpt.latest_step(ckpt_dir)}")
+
+    # ---- phase 2: restart from the last committed manifest and finish
+    tc2 = TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=50, async_ckpt=False)
+    tr2 = Trainer(model, oc, data, tc2)
+    state = tr2.init_or_restore(jax.random.PRNGKey(0))
+    print(f"restarted from step {tr2.start_step}")
+    state = tr2.run(state, STEPS - tr2.start_step)
+    hist = tr2.history
+    print(f"final: step {hist[-1]['step']} "
+          f"loss={hist[-1]['ce_loss']:.3f} acc={hist[-1]['accuracy']:.3f}")
+
+    # ---- phase 3: serve — the model should have learned the affine chain
+    params = state["params"]
+    t0 = 7
+    toks = [t0]
+    for _ in range(6):
+        toks.append((toks[-1] * 31 + 7) % cfg.vocab_size)
+    tokens = jnp.asarray([toks[:2]], jnp.int32)
+    logits, cache = jax.jit(model.prefill)(params, {"tokens": tokens})
+    cache = jax.tree_util.tree_map(
+        lambda a: jnp.pad(a, [(0, 0)] * (a.ndim - 2) + [(0, 8), (0, 0)]),
+        cache)
+    cur, tok = 2, jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    preds = [int(tok[0, 0])]
+    decode = jax.jit(model.decode_step, donate_argnums=(1,))
+    for i in range(4):
+        logits, cache = decode(params, cache, tok, jnp.asarray(cur + i))
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        preds.append(int(tok[0, 0]))
+    want = toks[2:7]
+    hits = sum(p == w for p, w in zip(preds, want))
+    print(f"greedy decode follows the learned chain: {hits}/5 "
+          f"(pred={preds}, want={want})")
+    shutil.rmtree(ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

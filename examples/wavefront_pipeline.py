@@ -1,0 +1,98 @@
+"""The paper's §4 wavefront as a *pipeline-parallel* schedule on real compute.
+
+A 2-D labeled-GUID map over (microbatch × stage) where each cell runs one
+jitted transformer-stage forward and satisfies the pre-slots of its right
+(next microbatch, same stage) and down (same microbatch, next stage)
+neighbours — the exact dependence structure of GPipe/1F1B, driven by the
+paper's creator-function mechanism.
+
+Run:  PYTHONPATH=src python examples/wavefront_pipeline.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import (DbMode, EDT_PROP_MAPPED, NULL_GUID, Runtime,
+                        UNINITIALIZED_GUID, spawn_main)
+from repro.models import blocks
+from repro.models.layers import cast_params
+
+MICRO = 4      # microbatches
+STAGES = 3     # pipeline stages (layers per stage: 1 smoke layer)
+B, S = 2, 32
+
+cfg = get_config("llama3.2-3b").reduced()
+key = jax.random.PRNGKey(0)
+stage_params = [blocks.decoder_layer_init(jax.random.fold_in(key, i), cfg,
+                                          "dense") for i in range(STAGES)]
+positions = jnp.arange(S)[None, :]
+
+
+@jax.jit
+def stage_fwd(params, x):
+    y, _ = blocks.decoder_layer_train(params, x, cfg, positions, "dense")
+    return y
+
+
+def main() -> None:
+    rt = Runtime(num_nodes=STAGES, net_latency=0.5)
+    # activations flowing between cells, keyed by (micro, stage)
+    acts = {(m, -1): jax.random.normal(jax.random.fold_in(key, 100 + m),
+                                       (B, S, cfg.d_model)) * 0.02
+            for m in range(MICRO)}
+    done = []
+    state = {}
+
+    def creator(ctx, lid, index, paramv, guidv):
+        m, s = index % MICRO, index // MICRO
+        deps = [NULL_GUID if m == 0 else UNINITIALIZED_GUID,
+                NULL_GUID if s == 0 else UNINITIALIZED_GUID]
+        ctx.edt_create(guidv[0], paramv=[index], depv=deps,
+                       props=EDT_PROP_MAPPED, placement=s % STAGES)
+
+    def cell(paramv, depv, api):
+        idx = paramv[0]
+        m, s = idx % MICRO, idx // MICRO
+        acts[(m, s)] = stage_fwd(stage_params[s], acts[(m, s - 1)])
+        done.append((m, s, api.rt.clock))
+        if m + 1 < MICRO:                   # free the right neighbour
+            t = api.map_get(state["map"], (m + 1) + s * MICRO)
+            api.add_dependence(NULL_GUID, t, 0, DbMode.NULL)
+        if s + 1 < STAGES:                  # free the down neighbour
+            t = api.map_get(state["map"], m + (s + 1) * MICRO)
+            api.add_dependence(NULL_GUID, t, 1, DbMode.NULL)
+        return NULL_GUID
+
+    def main_edt(paramv, depv, api):
+        tmpl = api.edt_template_create(cell, 1, 2)
+        state["map"] = api.map_create(MICRO * STAGES, creator, guidv=[tmpl])
+        api.map_get(state["map"], 0)        # seed cell (0, 0)
+        return NULL_GUID
+
+    spawn_main(rt, main_edt)
+    stats = rt.run()
+
+    print(f"executed {len(done)} cells; virtual makespan={stats.makespan:.1f} "
+          f"(critical path = {MICRO + STAGES - 1} waves)")
+    print("wavefront order (micro, stage, t):")
+    for m, s, t in done:
+        print(f"  m{m} s{s} @ {t:5.1f}")
+
+    # numerics check vs running the stages sequentially
+    for m in range(MICRO):
+        x = acts[(m, -1)]
+        for s in range(STAGES):
+            x = stage_fwd(stage_params[s], x)
+        err = float(jnp.max(jnp.abs(x - acts[(m, STAGES - 1)])))
+        assert err == 0.0, err
+    print("pipeline output == sequential output (exact)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md tables from results/dryrun.json (+ baseline)."""
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def table(cells, mesh):
+    lines = [
+        "| arch × shape | compute s | memory s | collective s | dominant "
+        "| useful | HBM fit (args+temp GB / 16) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for k in sorted(cells):
+        v = cells[k]
+        if v["mesh"] != mesh:
+            continue
+        name = f"{v['arch']} × {v['shape']}"
+        if v["status"] == "skipped":
+            lines.append(f"| {name} | — | — | — | skipped | — | "
+                         f"{v.get('reason','')[:46]} |")
+            continue
+        r = v["roofline"]
+        m = v["memory"]
+        tot = (m["temp_size_in_bytes"] + m["argument_size_in_bytes"]) / 1e9
+        fit = f"{tot:.1f} {'✓' if tot <= 16 else '✗'}"
+        lines.append(
+            f"| {name} | {r['compute_s']:.4f} | {r['memory_s']:.3f} | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {fit} |")
+    return "\n".join(lines)
+
+
+def main():
+    with open(os.path.join(ROOT, "results", "dryrun.json")) as f:
+        cells = json.load(f)["cells"]
+    print("### Single-pod (16×16 = 256 chips)\n")
+    print(table(cells, "16x16"))
+    print("\n### Multi-pod (2×16×16 = 512 chips)\n")
+    print(table(cells, "2x16x16"))
+
+    # collective breakdown for the three hillclimb cells
+    print("\n### Collective breakdown (hillclimb cells)\n")
+    print("| cell | all-gather GB | all-reduce GB | reduce-scatter GB | "
+          "all-to-all GB |")
+    print("|---|---|---|---|---|")
+    for k in ("deepseek-v2-236b|train_4k|16x16",
+              "smollm-360m|train_4k|16x16",
+              "zamba2-1.2b|long_500k|16x16"):
+        v = cells[k]
+        c = v["collectives"]["per_kind"]
+        print(f"| {k} | {c['all-gather']/1e9:.1f} | "
+              f"{c['all-reduce']/1e9:.1f} | {c['reduce-scatter']/1e9:.1f} | "
+              f"{c['all-to-all']/1e9:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .checkpoint import save, restore, async_save, latest_step, CkptStats

@@ -1,0 +1,171 @@
+"""Runtime object model: events, EDTs, templates, data blocks, maps, files.
+
+Data blocks carry the §6 partitioning state (parent / live partitions /
+static flag) and the §5 file binding (file guid + offset + dirty bit).
+Locking state implements the acquire-mode semantics that make partitioning
+observable: RO/CONST are shared, RW/EW are exclusive *per data block* — so
+two tasks in EW on two disjoint partitions run in parallel while the same
+two tasks in RW on the whole parent serialize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .guid import DbMode, EventKind, Guid, Lid, NULL_GUID
+
+UNSET = object()  # pre-slot not yet satisfied
+
+
+class OcrError(RuntimeError):
+    pass
+
+
+class PartitionOverlapError(OcrError):
+    pass
+
+
+class PartitionDeadlockError(OcrError):
+    pass
+
+
+class PartitionStaticError(OcrError):
+    pass
+
+
+class ChunkOverlapError(OcrError):
+    pass
+
+
+class FileModeError(OcrError):
+    pass
+
+
+@dataclasses.dataclass
+class EventObj:
+    guid: Guid
+    kind: EventKind
+    # (dest guid, slot, mode) registered before satisfaction
+    dependents: List[Tuple[Guid, int, DbMode]] = dataclasses.field(default_factory=list)
+    satisfied: bool = False
+    payload: Any = NULL_GUID  # db guid delivered on satisfaction
+    latch_count: int = 0
+    destroyed: bool = False
+
+
+@dataclasses.dataclass
+class TemplateObj:
+    guid: Guid
+    func: Callable[..., Any]
+    paramc: int
+    depc: int
+    destroyed: bool = False
+
+
+@dataclasses.dataclass
+class EdtObj:
+    guid: Guid
+    template: Guid
+    paramv: Tuple[Any, ...]
+    depc: int
+    node: int
+    slots: List[Any] = dataclasses.field(default_factory=list)       # db guid | NULL_GUID | UNSET
+    modes: List[DbMode] = dataclasses.field(default_factory=list)
+    pending: int = 0
+    output_event: Optional[Guid] = None
+    duration: float = 1.0
+    state: str = "created"   # created -> ready -> running -> done
+    start_time: float = -1.0
+    end_time: float = -1.0
+    destroyed: bool = False
+
+
+@dataclasses.dataclass
+class DbObj:
+    guid: Guid
+    size: int
+    node: int
+    buffer: Optional[np.ndarray] = None            # uint8 view or owned array
+    no_acquire: bool = False                       # DB_PROP_NO_ACQUIRE (§6.3)
+    # --- partitioning state (§6) ---
+    parent: Optional[Guid] = None
+    offset_in_parent: int = 0
+    partitions: Dict[Guid, Tuple[int, int]] = dataclasses.field(default_factory=dict)
+    static_partitioning: bool = False
+    is_view: bool = False                          # zero-copy partition view
+    # --- file binding (§5) ---
+    file_guid: Optional[Guid] = None
+    file_offset: int = 0
+    dirty: bool = False
+    lazy_file_read: bool = False                   # contents read at first acquire
+    # --- lock state ---
+    readers: int = 0
+    writer: Optional[Guid] = None                  # holding EDT guid
+    destroyed: bool = False
+    pending_destroy: bool = False                  # destroy deferred until release
+
+    def overlaps(self, offset: int, size: int) -> bool:
+        for (o, s) in self.partitions.values():
+            if offset < o + s and o < offset + size:
+                return True
+        return False
+
+    def locked(self) -> bool:
+        return self.readers > 0 or self.writer is not None
+
+    def available(self, mode: DbMode) -> bool:
+        """Can an acquisition in ``mode`` be granted right now (locally)?"""
+        if mode == DbMode.NULL:
+            return True
+        if mode in (DbMode.RO, DbMode.CONST):
+            return self.writer is None
+        return self.readers == 0 and self.writer is None
+
+
+@dataclasses.dataclass
+class MapObj:
+    """Labeled-GUID map (§4)."""
+
+    guid: Guid
+    size: int
+    creator: Callable[..., Any]
+    paramv: Tuple[Any, ...]
+    guidv: Tuple[Any, ...]
+    entries: Dict[int, Guid] = dataclasses.field(default_factory=dict)
+    creator_calls: int = 0
+    destroyed: bool = False
+
+
+@dataclasses.dataclass
+class FileObj:
+    """File-mapped data block source (§5)."""
+
+    guid: Guid
+    path: str
+    mode: str                   # "rb" | "rb+" | "wb+"
+    size: int = 0
+    descriptor_db: Optional[Guid] = None
+    chunks: Dict[Guid, Tuple[int, int]] = dataclasses.field(default_factory=dict)
+    released: bool = False
+    closed: bool = False
+
+    @property
+    def writable(self) -> bool:
+        return "+" in self.mode or self.mode.startswith("w")
+
+    def chunk_overlaps(self, offset: int, size: int) -> bool:
+        for (o, s) in self.chunks.values():
+            if offset < o + s and o < offset + size:
+                return True
+        return False
+
+
+@dataclasses.dataclass
+class DepEntry:
+    """What an EDT body sees per pre-slot (``ocrEdtDep_t``)."""
+
+    guid: Any                    # db guid or NULL_GUID
+    ptr: Optional[np.ndarray]    # buffer view honouring the acquire mode
+    mode: DbMode = DbMode.RO

@@ -1,0 +1,1058 @@
+"""The OCR-extensions runtime (paper §2–§6).
+
+A deterministic, virtual-time, multi-node simulation of a message-based
+distributed OCR implementation:
+
+* Every API call translates to messages (paper §2).  Remote deliveries cost
+  ``net_latency`` of virtual time; an optional seeded ``jitter`` perturbs
+  delivery order so property tests can explore interleavings.
+* **LIDs (§3)** — object-creating calls with ``EDT_PROP_LID`` return a local
+  identifier immediately; messages referencing unresolved LIDs are *deferred*
+  on the issuing node, patched when the ``MMap`` resolution arrives, and only
+  then submitted (the M_create/M_dep/M_map protocol of §3).  ``get_guid`` is
+  the single blocking call; each forced resolution costs one round-trip
+  (2 × ``net_latency``) and is counted in :class:`Stats`.
+* **Labeled maps (§4)** — ``map_get`` returns a fresh LID instantly; the map
+  owner runs the creator function exactly once per index, and all LIDs for
+  an index resolve to the same GUID.
+* **File IO (§5)** — file-mapped data blocks with asynchronously-filled
+  descriptor blocks, non-overlapping chunks, dirty-only write-back.
+* **Partitioning (§6)** — disjoint EW partitions of one data block execute
+  in parallel; the parent is quiescent while partitions live; parent+child
+  in one task raises :class:`PartitionDeadlockError`; ``db_copy`` implements
+  the §6.3 zero-copy / copy-on-write path.
+
+Virtual time gives crisp, noise-free benchmarks: a task occupies
+``[start, start + duration + blocking_time]``, locks are held for that
+interval, and ``Stats.makespan`` is the completion time of the whole graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import os
+import random
+import struct
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .guid import (
+    DB_COPY_PARTITION,
+    DB_COPY_PARTITION_BACK,
+    DB_COPY_PLAIN,
+    DB_PROP_NO_ACQUIRE,
+    EDT_PROP_LID,
+    EDT_PROP_MAPPED,
+    OCR_DB_PARTITION_STATIC,
+    DbMode,
+    EventKind,
+    Guid,
+    IdType,
+    Lid,
+    NULL_GUID,
+    ObjectKind,
+    UNINITIALIZED_GUID,
+    id_type,
+    is_null,
+)
+from .messages import (
+    MCreate,
+    MDbCopy,
+    MDep,
+    MDestroy,
+    MFileOpened,
+    MMap,
+    MMapGet,
+    MSatisfy,
+    Message,
+)
+from .objects import (
+    ChunkOverlapError,
+    DbObj,
+    DepEntry,
+    EdtObj,
+    EventObj,
+    FileModeError,
+    FileObj,
+    MapObj,
+    OcrError,
+    PartitionDeadlockError,
+    PartitionOverlapError,
+    PartitionStaticError,
+    TemplateObj,
+    UNSET,
+)
+
+__all__ = [
+    "Runtime",
+    "TaskCtx",
+    "Stats",
+    "OcrError",
+    "PartitionOverlapError",
+    "PartitionDeadlockError",
+    "PartitionStaticError",
+    "ChunkOverlapError",
+    "FileModeError",
+]
+
+
+@dataclasses.dataclass
+class Stats:
+    messages_sent: int = 0
+    messages_remote: int = 0
+    messages_deferred: int = 0
+    deferred_patched: int = 0
+    blocking_roundtrips: int = 0
+    creator_calls: int = 0
+    tasks_executed: int = 0
+    bytes_copied: int = 0
+    bytes_zero_copy: int = 0
+    file_bytes_read: int = 0
+    file_bytes_written: int = 0
+    makespan: float = 0.0
+
+    def snapshot(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _Node:
+    idx: int
+    alive: bool = True
+    guid_seq: int = 0
+    lid_seq: int = 0
+    objects: Dict[Guid, Any] = dataclasses.field(default_factory=dict)
+    lid_table: Dict[Lid, Optional[Guid]] = dataclasses.field(default_factory=dict)
+    # messages held locally until all their unresolved LIDs are patched
+    deferred: Dict[Lid, List[Message]] = dataclasses.field(default_factory=dict)
+
+
+class Runtime:
+    """A virtual-time multi-node OCR runtime."""
+
+    def __init__(
+        self,
+        num_nodes: int = 1,
+        net_latency: float = 1.0,
+        io_latency: float = 1.0,
+        seed: int = 0,
+        jitter: float = 0.0,
+        trace: bool = False,
+    ):
+        self.num_nodes = num_nodes
+        self.net_latency = float(net_latency)
+        self.io_latency = float(io_latency)
+        self.jitter = float(jitter)
+        self.rng = random.Random(seed)
+        self.trace = trace
+        self.nodes = [_Node(i) for i in range(num_nodes)]
+        self.stats = Stats()
+        self.clock = 0.0
+        self._heap: List[Tuple[float, int, str, Any]] = []
+        self._tick = itertools.count()
+        self._cancelled: set = set()
+        self._placement_rr = 0
+        self.shutdown_requested = False
+        # lid -> in-flight message that will bind it (for forced resolution)
+        self._pending_lid_msg: Dict[Lid, Message] = {}
+        # db guid -> EDTs waiting for locks
+        self._lock_waiters: List[Guid] = []
+        # registry so file descriptors can be decoded from raw pointers (§5)
+        self.file_registry: List[Guid] = []
+
+    # ------------------------------------------------------------------ util
+
+    def _log(self, *args: Any) -> None:
+        if self.trace:
+            print(f"[t={self.clock:8.2f}]", *args)
+
+    def node(self, i: int) -> _Node:
+        return self.nodes[i]
+
+    def _alloc_guid(self, node: int, kind: ObjectKind) -> Guid:
+        n = self.nodes[node]
+        n.guid_seq += 1
+        return Guid(node, n.guid_seq, kind)
+
+    def _alloc_lid(self, node: int) -> Lid:
+        n = self.nodes[node]
+        n.lid_seq += 1
+        lid = Lid(node, n.lid_seq)
+        n.lid_table[lid] = None
+        return lid
+
+    def _pick_node(self, hint: Optional[int]) -> int:
+        if hint is not None:
+            return hint % self.num_nodes
+        self._placement_rr = (self._placement_rr + 1) % self.num_nodes
+        return self._placement_rr
+
+    def lookup(self, gid: Guid) -> Any:
+        obj = self.nodes[gid.node].objects.get(gid)
+        if obj is None:
+            raise OcrError(f"unknown or destroyed object {gid}")
+        return obj
+
+    def try_lookup(self, gid: Guid) -> Any:
+        return self.nodes[gid.node].objects.get(gid)
+
+    def resolve(self, x: Any) -> Any:
+        """LID → GUID if already resolved, else the LID itself."""
+        if isinstance(x, Lid):
+            g = self.nodes[x.node].lid_table.get(x)
+            return g if g is not None else x
+        return x
+
+    # ------------------------------------------------------ message transport
+
+    def send(self, msg: Message, src: int, dst: int, at: Optional[float] = None) -> None:
+        msg.stamp(src, dst)
+        when = self.clock if at is None else at
+        # §3: messages referencing a locally-unresolved LID are deferred on
+        # the issuing node.  The *binding* lid of MCreate/MMapGet travels.
+        binding = getattr(msg, "lid", None)
+        unresolved = [
+            l for l in msg.lids()
+            if l != binding and l.node == src and self.nodes[src].lid_table.get(l) is None
+        ]
+        if unresolved:
+            self.stats.messages_deferred += 1
+            self._log("DEFER", type(msg).__name__, "on", unresolved)
+            # park on the first unresolved lid; re-checked after each patch
+            self.nodes[src].deferred.setdefault(unresolved[0], []).append(msg)
+            msg._deliver_at = when  # type: ignore[attr-defined]
+            return
+        self._transmit(msg, when)
+
+    def _transmit(self, msg: Message, when: float) -> None:
+        self.stats.messages_sent += 1
+        lat = 0.0
+        if msg.src_node != msg.dst_node:
+            self.stats.messages_remote += 1
+            lat = self.net_latency
+        if self.jitter:
+            lat += self.rng.uniform(0.0, self.jitter)
+        binding = getattr(msg, "lid", None)
+        if binding is not None and isinstance(msg, (MCreate, MMapGet)):
+            self._pending_lid_msg[binding] = msg
+        heapq.heappush(self._heap, (when + lat, next(self._tick), "msg", msg))
+
+    # --------------------------------------------------------------- run loop
+
+    def run(self, until: Optional[float] = None) -> Stats:
+        """Process events until quiescent, shutdown, or ``until``."""
+        while self._heap and not self.shutdown_requested:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if until is not None and t > until:
+                heapq.heappush(self._heap, (t, next(self._tick), kind, payload))
+                break
+            self.clock = max(self.clock, t)
+            if kind == "msg":
+                if payload.uid in self._cancelled:
+                    continue
+                self._dispatch(payload)
+            elif kind == "task_end":
+                self._task_end(payload)
+            elif kind == "db_copy":
+                self._do_db_copy(payload)
+        self.stats.makespan = self.clock
+        return self.stats
+
+    def quiescent(self) -> bool:
+        return not self._heap
+
+    def kill_node(self, idx: int) -> None:
+        """Fail-stop a node: lose its objects and all in-flight traffic to it."""
+        self.nodes[idx].alive = False
+
+    # ---------------------------------------------------------- msg dispatch
+
+    def _dispatch(self, msg: Message) -> None:
+        if not self.nodes[msg.dst_node].alive:
+            self._log("DROP (dead node)", type(msg).__name__)
+            return
+        handler = getattr(self, f"_on_{type(msg).__name__}")
+        handler(msg)
+
+    # -- creation ----------------------------------------------------------
+
+    def _on_MCreate(self, msg: MCreate) -> None:
+        guid = self._create_object(msg.dst_node, msg.kind, msg.payload)
+        if msg.lid is not None:
+            self._pending_lid_msg.pop(msg.lid, None)
+            self.send(MMap(lid=msg.lid, guid=guid), msg.dst_node, msg.lid.node)
+
+    def _create_object(self, node: int, kind: str, payload: Dict[str, Any]) -> Guid:
+        if kind == "edt":
+            return self._create_edt(node, payload)
+        raise OcrError(f"unsupported remote-create kind {kind}")
+
+    def _create_edt(self, node: int, p: Dict[str, Any]) -> Guid:
+        guid = self._alloc_guid(node, ObjectKind.EDT)
+        tmpl_id = self.resolve(p["template"])
+        depv = [self.resolve(d) for d in p.get("depv") or []]
+        depc = p["depc"]
+        edt = EdtObj(
+            guid=guid,
+            template=tmpl_id,
+            paramv=tuple(p.get("paramv") or ()),
+            depc=depc,
+            node=node,
+            slots=[UNSET] * depc,
+            modes=[DbMode.RO] * depc,
+            pending=depc,
+            duration=p.get("duration", 1.0),
+        )
+        if p.get("output_event") is not None:
+            edt.output_event = p["output_event"]
+        self.nodes[node].objects[guid] = edt
+        # wire creation-time dependences
+        modes = p.get("dep_modes") or [DbMode.RO] * len(depv)
+        for slot, (dep, mode) in enumerate(zip(depv, modes)):
+            if dep is UNSET or dep == UNINITIALIZED_GUID:
+                continue
+            edt.modes[slot] = mode
+            if is_null(dep):
+                self._satisfy_slot(edt, slot, NULL_GUID)
+            else:
+                self.send(MDep(source=dep, dest=guid, slot=slot, mode=mode),
+                          node, dep.node if isinstance(dep, Guid) else node)
+        if edt.pending == 0 and edt.state == "created":
+            edt.state = "ready"
+            self._try_grant(edt)
+        return guid
+
+    def _on_MMap(self, msg: MMap) -> None:
+        self._apply_lid_binding(msg.lid, msg.guid)
+
+    def _apply_lid_binding(self, lid: Lid, guid: Guid) -> None:
+        node = self.nodes[lid.node]
+        node.lid_table[lid] = guid
+        waiting = node.deferred.pop(lid, [])
+        for m in waiting:
+            self.stats.deferred_patched += 1
+            m.patch({lid: guid})
+            # re-submit: may still have other unresolved lids
+            still = [
+                l for l in m.lids()
+                if l != getattr(m, "lid", None)
+                and l.node == lid.node and node.lid_table.get(l) is None
+            ]
+            if still:
+                node.deferred.setdefault(still[0], []).append(m)
+            else:
+                self._transmit(m, max(self.clock, getattr(m, "_deliver_at", self.clock)))
+
+    # -- dependences & satisfaction -----------------------------------------
+
+    def _on_MDep(self, msg: MDep) -> None:
+        src = self.resolve(msg.source)
+        if is_null(src):
+            dest = self.resolve(msg.dest)
+            self.send(MSatisfy(target=dest, slot=msg.slot, db=NULL_GUID, ),
+                      msg.dst_node, dest.node if isinstance(dest, Guid) else msg.dst_node)
+            return
+        obj = self.lookup(src)
+        if isinstance(obj, EventObj):
+            if obj.destroyed and not obj.satisfied:
+                raise OcrError(f"dependence on destroyed event {src}")
+            if obj.satisfied:
+                # sticky/latch by definition; once-events via tombstone
+                self.send(MSatisfy(target=msg.dest, slot=msg.slot, db=obj.payload),
+                          msg.dst_node, self._owner(msg.dest))
+            else:
+                obj.dependents.append((msg.dest, msg.slot, msg.mode))
+        elif isinstance(obj, DbObj):
+            # §5: descriptor blocks delay satisfaction until the file opens
+            if not getattr(obj, "ready", True):
+                obj.pending_deps.append((msg.dest, msg.slot, msg.mode))
+            else:
+                self.send(MSatisfy(target=msg.dest, slot=msg.slot, db=src),
+                          msg.dst_node, self._owner(msg.dest))
+        else:
+            raise OcrError(f"invalid dependence source {src}")
+        # record the mode on the destination slot
+        dest = self.resolve(msg.dest)
+        if isinstance(dest, Guid) and dest.kind == ObjectKind.EDT:
+            edt = self.try_lookup(dest)
+            if edt is not None and msg.slot < len(edt.modes):
+                edt.modes[msg.slot] = msg.mode
+
+    def _owner(self, x: Any) -> int:
+        x = self.resolve(x)
+        if isinstance(x, Guid):
+            return x.node
+        if isinstance(x, Lid):
+            return x.node
+        raise OcrError(f"cannot route to {x}")
+
+    def _on_MSatisfy(self, msg: MSatisfy) -> None:
+        target = self.resolve(msg.target)
+        obj = self.lookup(target)
+        db = self.resolve(msg.db)
+        if isinstance(obj, EventObj):
+            self._satisfy_event(obj, db)
+        elif isinstance(obj, EdtObj):
+            self._satisfy_slot(obj, msg.slot, db)
+        else:
+            raise OcrError(f"cannot satisfy {target}")
+
+    def _satisfy_event(self, ev: EventObj, db: Any) -> None:
+        if ev.kind == EventKind.LATCH:
+            ev.latch_count -= 1
+            if ev.latch_count > 0:
+                return
+        if ev.satisfied and ev.kind == EventKind.STICKY:
+            return
+        ev.satisfied = True
+        ev.payload = db
+        for (dest, slot, _mode) in ev.dependents:
+            self.send(MSatisfy(target=dest, slot=slot, db=db),
+                      ev.guid.node, self._owner(dest))
+        if ev.kind == EventKind.ONCE:
+            # fire-once, then leave a satisfiable tombstone: a dependence
+            # added after the fire (reordered delivery) still receives the
+            # payload instead of racing against destruction
+            ev.dependents = []
+            ev.destroyed = True
+
+    def _satisfy_slot(self, edt: EdtObj, slot: int, db: Any) -> None:
+        if edt.slots[slot] is not UNSET:
+            raise OcrError(f"slot {slot} of {edt.guid} satisfied twice")
+        edt.slots[slot] = db
+        edt.pending -= 1
+        if edt.pending == 0:
+            edt.state = "ready"
+            self._try_grant(edt)
+
+    # -- locks & execution ---------------------------------------------------
+
+    def _dep_dbs(self, edt: EdtObj) -> List[Tuple[DbObj, DbMode]]:
+        out = []
+        for s, mode in zip(edt.slots, edt.modes):
+            if isinstance(s, Guid) and s.kind == ObjectKind.DATABLOCK and mode != DbMode.NULL:
+                db = self.try_lookup(s)
+                if db is not None:
+                    out.append((db, mode))
+        return out
+
+    def _ancestors(self, db: DbObj) -> List[Guid]:
+        out = []
+        cur = db
+        while cur.parent is not None:
+            out.append(cur.parent)
+            cur = self.lookup(cur.parent)
+        return out
+
+    def _check_deadlock(self, deps: List[Tuple[DbObj, DbMode]]) -> None:
+        guids = {d.guid for d, _ in deps}
+        for d, _ in deps:
+            if guids.intersection(self._ancestors(d)):
+                raise PartitionDeadlockError(
+                    f"task acquires data block {d.guid} and one of its ancestors "
+                    f"— §6.2 forbids parent+partition in one task (deadlock)")
+
+    def _try_grant(self, edt: EdtObj) -> None:
+        deps = self._dep_dbs(edt)
+        self._check_deadlock(deps)
+        for db, mode in deps:
+            # §6.2 quiescence: a partitioned block is unavailable in any mode
+            if db.partitions:
+                self._enqueue_waiter(edt)
+                return
+            if not db.available(mode):
+                self._enqueue_waiter(edt)
+                return
+        for db, mode in deps:
+            if mode in (DbMode.RO, DbMode.CONST):
+                db.readers += 1
+            elif mode in (DbMode.RW, DbMode.EW):
+                db.writer = edt.guid
+            if mode in (DbMode.RW, DbMode.EW):
+                db.dirty = True
+        self._execute(edt)
+
+    def _enqueue_waiter(self, edt: EdtObj) -> None:
+        if edt.guid not in self._lock_waiters:
+            self._lock_waiters.append(edt.guid)
+
+    def _retry_waiters(self) -> None:
+        waiters, self._lock_waiters = self._lock_waiters, []
+        for g in waiters:
+            edt = self.try_lookup(g)
+            if edt is not None and edt.state == "ready":
+                self._try_grant(edt)
+
+    def _materialize(self, db: DbObj) -> np.ndarray:
+        if db.buffer is None:
+            if db.lazy_file_read and db.file_guid is not None:
+                f: FileObj = self.lookup(db.file_guid)
+                db.buffer = _read_file_region(f.path, db.file_offset, db.size)
+                self.stats.file_bytes_read += db.size
+                db.lazy_file_read = False
+            else:
+                db.buffer = np.zeros(db.size, dtype=np.uint8)
+        return db.buffer
+
+    def _execute(self, edt: EdtObj) -> None:
+        edt.state = "running"
+        edt.start_time = self.clock
+        tmpl: TemplateObj = self.lookup(edt.template)
+        depv = []
+        for s, mode in zip(edt.slots, edt.modes):
+            if isinstance(s, Guid) and s.kind == ObjectKind.DATABLOCK:
+                db = self.lookup(s)
+                buf = self._materialize(db)
+                if mode in (DbMode.RO, DbMode.CONST):
+                    view = buf.view()
+                    view.setflags(write=False)
+                else:
+                    view = buf
+                depv.append(DepEntry(guid=s, ptr=view, mode=mode))
+            else:
+                depv.append(DepEntry(guid=s if isinstance(s, Guid) else NULL_GUID,
+                                     ptr=None, mode=mode))
+        ctx = TaskCtx(self, edt.node, edt)
+        self._log("RUN", edt.guid, tmpl.func.__name__)
+        ret = tmpl.func(list(edt.paramv), depv, ctx)
+        self.stats.tasks_executed += 1
+        end = edt.start_time + edt.duration + ctx.blocking_time
+        edt.end_time = end
+        heapq.heappush(self._heap, (end, next(self._tick), "task_end", (edt.guid, ret)))
+
+    def _task_end(self, payload: Tuple[Guid, Any]) -> None:
+        guid, ret = payload
+        edt: EdtObj = self.lookup(guid)
+        for db, mode in self._dep_dbs(edt):
+            if mode in (DbMode.RO, DbMode.CONST):
+                db.readers = max(0, db.readers - 1)
+            elif db.writer == guid:
+                db.writer = None
+            if db.pending_destroy and not db.locked():
+                self._destroy_db(db)
+        edt.state = "done"
+        if edt.output_event is not None:
+            ret_r = self.resolve(ret) if ret is not None else NULL_GUID
+            if isinstance(ret_r, Guid) and ret_r.kind == ObjectKind.EVENT and not is_null(ret_r):
+                self.send(MDep(source=ret_r, dest=edt.output_event, slot=0,
+                               mode=DbMode.RO), edt.node, ret_r.node)
+            else:
+                self.send(MSatisfy(target=edt.output_event, slot=0,
+                                   db=ret_r if isinstance(ret_r, Guid) else NULL_GUID),
+                          edt.node, self._owner(edt.output_event))
+        self.nodes[edt.node].objects.pop(guid, None)
+        self._retry_waiters()
+
+    # -- destruction ---------------------------------------------------------
+
+    def _on_MDestroy(self, msg: MDestroy) -> None:
+        self.destroy(self.resolve(msg.target))
+
+    def destroy(self, gid: Guid) -> None:
+        obj = self.try_lookup(gid)
+        if obj is None:
+            return
+        if isinstance(obj, DbObj):
+            if obj.locked() or obj.partitions:
+                # acquired by a running task, or has live partitions (§6.2):
+                # defer destruction until release / last partition destroyed
+                obj.pending_destroy = True
+                return
+            self._destroy_db(obj)
+        else:
+            obj.destroyed = True
+            self.nodes[gid.node].objects.pop(gid, None)
+
+    def _destroy_db(self, db: DbObj) -> None:
+        if db.partitions:
+            raise OcrError(f"destroying {db.guid} while partitions are live")
+        # unlink from parent partition table
+        if db.parent is not None:
+            parent = self.try_lookup(db.parent)
+            if parent is not None:
+                parent.partitions.pop(db.guid, None)
+                if not parent.partitions:
+                    parent.static_partitioning = False
+                    if parent.pending_destroy and not parent.locked():
+                        self._destroy_db(parent)
+                self._retry_waiters()
+        # §5 write-back: dirty chunks flush; enlarging chunks enlarge
+        if db.file_guid is not None:
+            f: FileObj = self.lookup(db.file_guid)
+            if db.dirty and f.writable and db.buffer is not None:
+                _write_file_region(f.path, db.file_offset, db.buffer)
+                self.stats.file_bytes_written += db.size
+            elif f.writable and db.file_offset + db.size > _file_size(f.path):
+                _enlarge_file(f.path, db.file_offset + db.size)
+            f.chunks.pop(db.guid, None)
+            if f.released and not f.chunks:
+                f.closed = True
+        db.destroyed = True
+        self.nodes[db.guid.node].objects.pop(db.guid, None)
+
+    # -- labeled maps (§4) ----------------------------------------------------
+
+    def _on_MMapGet(self, msg: MMapGet) -> None:
+        m: MapObj = self.lookup(self.resolve(msg.map_id))
+        if not (0 <= msg.index < m.size):
+            raise OcrError(f"map index {msg.index} out of range [0,{m.size})")
+        if msg.index not in m.entries:
+            # exactly-once creation, synchronized at the owning node
+            m.creator_calls += 1
+            self.stats.creator_calls += 1
+            object_lid = self._alloc_lid(m.guid.node)
+            ctx = TaskCtx(self, m.guid.node, None)
+            ctx._mapped_lid = object_lid
+            m.creator(ctx, object_lid, msg.index, list(m.paramv), list(m.guidv))
+            bound = self.nodes[m.guid.node].lid_table.get(object_lid)
+            if bound is None:
+                raise OcrError(
+                    "creator function must create the object with "
+                    "EDT_PROP_MAPPED binding the provided LID")
+            m.entries[msg.index] = bound
+        guid = m.entries[msg.index]
+        if msg.lid is not None:
+            self._pending_lid_msg.pop(msg.lid, None)
+            self.send(MMap(lid=msg.lid, guid=guid), msg.dst_node, msg.lid.node)
+
+    # -- db copy (§6.3) --------------------------------------------------------
+
+    def _on_MDbCopy(self, msg: MDbCopy) -> None:
+        self._do_db_copy(msg)
+
+    def _do_db_copy(self, msg: MDbCopy) -> None:
+        dst: DbObj = self.lookup(self.resolve(msg.dst))
+        src: DbObj = self.lookup(self.resolve(msg.src))
+        if msg.copy_type == DB_COPY_PARTITION:
+            whole_dst = msg.dst_offset == 0 and msg.size == dst.size
+            if dst.no_acquire and whole_dst and dst.buffer is None:
+                # zero-copy: dst becomes a partition view of src (COW)
+                if src.overlaps(msg.src_offset, msg.size):
+                    raise PartitionOverlapError(
+                        f"copy-partition [{msg.src_offset},+{msg.size}) overlaps "
+                        f"a live partition of {src.guid}")
+                buf = self._materialize(src)
+                dst.buffer = buf[msg.src_offset: msg.src_offset + msg.size]
+                dst.is_view = True
+                dst.parent = src.guid
+                dst.offset_in_parent = msg.src_offset
+                src.partitions[dst.guid] = (msg.src_offset, msg.size)
+                self.stats.bytes_zero_copy += msg.size
+            else:
+                sbuf = self._materialize(src)
+                dbuf = self._materialize(dst)
+                dbuf[msg.dst_offset: msg.dst_offset + msg.size] = \
+                    sbuf[msg.src_offset: msg.src_offset + msg.size]
+                self.stats.bytes_copied += msg.size
+        elif msg.copy_type == DB_COPY_PARTITION_BACK:
+            aligned_view = (
+                src.is_view and src.parent == dst.guid
+                and src.offset_in_parent == msg.dst_offset and msg.size == src.size)
+            if aligned_view:
+                self.stats.bytes_zero_copy += msg.size  # nothing moves
+            else:
+                sbuf = self._materialize(src)
+                dbuf = self._materialize(dst)
+                dbuf[msg.dst_offset: msg.dst_offset + msg.size] = \
+                    sbuf[msg.src_offset: msg.src_offset + msg.size]
+                self.stats.bytes_copied += msg.size
+            self._destroy_db(src)  # PARTITION_BACK entails destruction of src
+        else:
+            sbuf = self._materialize(src)
+            dbuf = self._materialize(dst)
+            dbuf[msg.dst_offset: msg.dst_offset + msg.size] = \
+                sbuf[msg.src_offset: msg.src_offset + msg.size]
+            self.stats.bytes_copied += msg.size
+        ev = self.resolve(msg.completion_event)
+        if isinstance(ev, Guid) and not is_null(ev):
+            self.send(MSatisfy(target=ev, slot=0, db=NULL_GUID),
+                      msg.dst_node, ev.node)
+
+    # -- file IO (§5) -----------------------------------------------------------
+
+    def _on_MFileOpened(self, msg: MFileOpened) -> None:
+        f: FileObj = self.lookup(msg.file_guid)
+        f.size = msg.size
+        desc: DbObj = self.lookup(self.resolve(msg.descriptor_db))
+        buf = self._materialize(desc)
+        key = len(self.file_registry)
+        self.file_registry.append(f.guid)
+        buf[:16] = np.frombuffer(struct.pack("<QQ", msg.size, key), dtype=np.uint8)
+        desc.ready = True
+        pend = desc.pending_deps
+        desc.pending_deps = []
+        for (dest, slot, _mode) in pend:
+            self.send(MSatisfy(target=dest, slot=slot, db=desc.guid),
+                      desc.guid.node, self._owner(dest))
+
+    # -- forced LID resolution (§3 ocrGetGuid — the one blocking call) -----------
+
+    def force_resolve(self, lid: Lid, ctx: Optional["TaskCtx"] = None) -> Guid:
+        node = self.nodes[lid.node]
+        g = node.lid_table.get(lid)
+        if g is not None:
+            return g
+        self.stats.blocking_roundtrips += 1
+        if ctx is not None:
+            ctx.blocking_time += 2 * self.net_latency
+        msg = self._pending_lid_msg.pop(lid, None)
+        if msg is None:
+            # the message may itself be deferred on another lid — resolve those
+            for other, queue in list(node.deferred.items()):
+                for m in queue:
+                    if getattr(m, "lid", None) == lid:
+                        self.force_resolve(other, ctx)
+                        return self.force_resolve(lid, ctx)
+            raise OcrError(f"no pending creation for {lid}")
+        self._cancelled.add(msg.uid)
+        # resolve any other lids the creation itself depends on
+        for l in msg.lids():
+            if l != lid and isinstance(l, Lid):
+                self.force_resolve(l, ctx)
+                msg.patch({l: self.nodes[l.node].lid_table[l]})
+        if isinstance(msg, MCreate):
+            guid = self._create_object(msg.dst_node, msg.kind, msg.payload)
+        elif isinstance(msg, MMapGet):
+            saved, msg.lid = msg.lid, None
+            self._on_MMapGet(msg)
+            m: MapObj = self.lookup(self.resolve(msg.map_id))
+            guid = m.entries[msg.index]
+            msg.lid = saved
+        else:
+            raise OcrError(f"cannot force-resolve via {type(msg).__name__}")
+        self._apply_lid_binding(lid, guid)
+        return guid
+
+
+# ---------------------------------------------------------------- file helpers
+
+
+def _file_size(path: str) -> int:
+    try:
+        return os.path.getsize(path)
+    except OSError:
+        return 0
+
+
+def _read_file_region(path: str, offset: int, size: int) -> np.ndarray:
+    buf = np.zeros(size, dtype=np.uint8)
+    try:
+        with open(path, "rb") as f:
+            f.seek(offset)
+            data = f.read(size)
+        buf[: len(data)] = np.frombuffer(data, dtype=np.uint8)
+    except OSError:
+        pass
+    return buf
+
+
+def _write_file_region(path: str, offset: int, buf: np.ndarray) -> None:
+    mode = "r+b" if os.path.exists(path) else "w+b"
+    with open(path, mode) as f:
+        f.seek(offset)
+        f.write(buf.tobytes())
+
+
+def _enlarge_file(path: str, new_size: int) -> None:
+    mode = "r+b" if os.path.exists(path) else "w+b"
+    with open(path, mode) as f:
+        f.truncate(max(new_size, _file_size(path)))
+
+
+# ------------------------------------------------------------------- Task API
+
+
+class TaskCtx:
+    """The OCR API surface bound to (runtime, node, current task) — the
+    ``api`` argument every EDT body receives.  Mirrors the paper's functions
+    with pythonic names; all calls are non-blocking except :meth:`get_guid`.
+    """
+
+    def __init__(self, rt: Runtime, node: int, edt: Optional[EdtObj]):
+        self.rt = rt
+        self.node = node
+        self.edt = edt
+        self.blocking_time = 0.0
+        self._mapped_lid: Optional[Lid] = None
+
+    # -- time of the current API call within the task's execution window
+    @property
+    def now(self) -> float:
+        return self.rt.clock + self.blocking_time
+
+    # -- templates / EDTs ------------------------------------------------------
+
+    def edt_template_create(self, func: Callable, paramc: int, depc: int) -> Guid:
+        g = self.rt._alloc_guid(self.node, ObjectKind.TEMPLATE)
+        self.rt.nodes[self.node].objects[g] = TemplateObj(g, func, paramc, depc)
+        return g
+
+    def edt_template_destroy(self, tmpl: Guid) -> None:
+        self.rt.destroy(tmpl)
+
+    def edt_create(
+        self,
+        template: Any,
+        paramv: Sequence[Any] = (),
+        depv: Optional[Sequence[Any]] = None,
+        props: int = 0,
+        output_event: bool = False,
+        placement: Optional[int] = None,
+        duration: float = 1.0,
+        dep_modes: Optional[Sequence[DbMode]] = None,
+        mapped_id: Optional[Lid] = None,
+    ) -> Tuple[Any, Optional[Guid]]:
+        """``ocrEdtCreate``.  Returns ``(id, output_event_guid)``.
+
+        * default: blocks for the GUID when the target node is remote
+          (cost: one round-trip of virtual time);
+        * ``EDT_PROP_LID``: returns a LID immediately (§3);
+        * ``EDT_PROP_MAPPED``: binds the map-provided ``mapped_id`` (§4).
+        """
+        tmpl = self.rt.resolve(template)
+        depc = None
+        t_obj = self.rt.try_lookup(tmpl) if isinstance(tmpl, Guid) else None
+        if t_obj is not None:
+            depc = t_obj.depc
+        if depc is None:
+            depc = len(depv or [])
+        target = self.rt._pick_node(placement)
+        out_ev = None
+        if output_event:
+            out_ev = self.event_create(EventKind.ONCE)
+        payload = dict(template=tmpl, paramv=tuple(paramv), depv=list(depv or []),
+                       depc=depc, output_event=out_ev, duration=duration,
+                       dep_modes=list(dep_modes) if dep_modes else None)
+        if props & EDT_PROP_MAPPED:
+            lid = mapped_id if mapped_id is not None else self._mapped_lid
+            if lid is None:
+                raise OcrError("EDT_PROP_MAPPED requires the map-provided LID")
+            guid = self.rt._create_edt(self.node if target is None else target, payload)
+            self.rt._apply_lid_binding(lid, guid)
+            return lid, out_ev
+        if target == self.node:
+            # local creation: a real GUID is free (§3: "the runtime may be
+            # able to return a real GUID ... even without communication")
+            guid = self.rt._create_edt(self.node, payload)
+            return guid, out_ev
+        if props & EDT_PROP_LID:
+            lid = self.rt._alloc_lid(self.node)
+            self.rt.send(MCreate(kind="edt", lid=lid, payload=payload),
+                         self.node, target, at=self.now)
+            return lid, out_ev
+        # blocking GUID path: one synchronous round-trip
+        self.rt.stats.blocking_roundtrips += 1
+        self.blocking_time += 2 * self.rt.net_latency
+        guid = self.rt._create_edt(target, payload)
+        return guid, out_ev
+
+    # -- events ---------------------------------------------------------------
+
+    def event_create(self, kind: EventKind = EventKind.ONCE, latch_count: int = 0) -> Guid:
+        g = self.rt._alloc_guid(self.node, ObjectKind.EVENT)
+        ev = EventObj(g, kind, latch_count=latch_count)
+        self.rt.nodes[self.node].objects[g] = ev
+        return g
+
+    def event_satisfy(self, event: Any, db: Any = NULL_GUID) -> None:
+        tgt = self.rt.resolve(event)
+        self.rt.send(MSatisfy(target=tgt, slot=0, db=self.rt.resolve(db)),
+                     self.node, self.rt._owner(tgt), at=self.now)
+
+    def event_destroy(self, event: Any) -> None:
+        self.rt.send(MDestroy(target=self.rt.resolve(event)),
+                     self.node, self.rt._owner(event), at=self.now)
+
+    def add_dependence(self, source: Any, dest: Any, slot: int,
+                       mode: DbMode = DbMode.RO) -> None:
+        src = self.rt.resolve(source)
+        dst = self.rt.resolve(dest)
+        route = self.node if (is_null(src) or not isinstance(src, Guid)) \
+            else src.node
+        self.rt.send(MDep(source=src, dest=dst, slot=slot, mode=mode),
+                     self.node, route, at=self.now)
+
+    # -- data blocks ------------------------------------------------------------
+
+    def db_create(self, size: int, props: int = 0) -> Tuple[Guid, Optional[np.ndarray]]:
+        g = self.rt._alloc_guid(self.node, ObjectKind.DATABLOCK)
+        no_acq = bool(props & DB_PROP_NO_ACQUIRE)
+        db = DbObj(guid=g, size=size, node=self.node, no_acquire=no_acq)
+        db.ready = True
+        db.pending_deps = []
+        if not no_acq:
+            db.buffer = np.zeros(size, dtype=np.uint8)
+        self.rt.nodes[self.node].objects[g] = db
+        return g, db.buffer
+
+    def db_release(self, db: Any) -> None:
+        d: DbObj = self.rt.lookup(self.rt.resolve(db))
+        if self.edt is not None and d.writer == self.edt.guid:
+            d.writer = None
+            if d.pending_destroy and not d.locked():
+                self.rt._destroy_db(d)
+            self.rt._retry_waiters()
+
+    def db_destroy(self, db: Any) -> None:
+        self.rt.send(MDestroy(target=self.rt.resolve(db)),
+                     self.node, self.rt._owner(db), at=self.now)
+
+    def db_partition(self, db: Any, parts: Sequence[Tuple[int, int]],
+                     props: int = 0) -> List[Guid]:
+        """``ocrDbPartition`` (§6.2): split into disjoint contiguous partitions."""
+        parent: DbObj = self.rt.lookup(self.rt.resolve(db))
+        if parent.destroyed:
+            raise OcrError(f"partitioning destroyed block {parent.guid}")
+        if parent.static_partitioning and parent.partitions:
+            raise PartitionStaticError(
+                f"{parent.guid} has static partitioning; destroy all partitions first")
+        # validate: in-bounds, mutually disjoint, disjoint from live partitions
+        for i, (o, s) in enumerate(parts):
+            if s <= 0 or o < 0 or o + s > parent.size:
+                raise PartitionOverlapError(
+                    f"partition [{o},+{s}) out of bounds of {parent.guid} (size {parent.size})")
+            if parent.overlaps(o, s):
+                raise PartitionOverlapError(
+                    f"partition [{o},+{s}) overlaps a live partition of {parent.guid}")
+            for j, (o2, s2) in enumerate(parts):
+                if i < j and o < o2 + s2 and o2 < o + s:
+                    raise PartitionOverlapError(
+                        f"requested partitions [{o},+{s}) and [{o2},+{s2}) overlap")
+        buf = self.rt._materialize(parent)
+        out = []
+        for (o, s) in parts:
+            g = self.rt._alloc_guid(parent.guid.node, ObjectKind.DATABLOCK)
+            child = DbObj(guid=g, size=s, node=parent.guid.node,
+                          buffer=buf[o: o + s], parent=parent.guid,
+                          offset_in_parent=o, is_view=True)
+            child.ready = True
+            child.pending_deps = []
+            self.rt.nodes[parent.guid.node].objects[g] = child
+            parent.partitions[g] = (o, s)
+            out.append(g)
+        if props & OCR_DB_PARTITION_STATIC:
+            parent.static_partitioning = True
+        return out
+
+    def db_copy(self, dst: Any, dst_offset: int, src: Any, src_offset: int,
+                size: int, copy_type: int = DB_COPY_PLAIN) -> Guid:
+        """``ocrDbCopy`` (§6.3): asynchronous copy; returns a completion event."""
+        ev = self.event_create(EventKind.ONCE)
+        self.rt.send(
+            MDbCopy(dst=self.rt.resolve(dst), dst_offset=dst_offset,
+                    src=self.rt.resolve(src), src_offset=src_offset, size=size,
+                    copy_type=copy_type, completion_event=ev),
+            self.node, self.rt._owner(src), at=self.now)
+        return ev
+
+    # -- labeled maps (§4) ---------------------------------------------------------
+
+    def map_create(self, size: int, creator: Callable, paramv: Sequence[Any] = (),
+                   guidv: Sequence[Any] = (), placement: Optional[int] = None) -> Guid:
+        node = self.node if placement is None else placement % self.rt.num_nodes
+        g = self.rt._alloc_guid(node, ObjectKind.MAP)
+        self.rt.nodes[node].objects[g] = MapObj(
+            guid=g, size=size, creator=creator,
+            paramv=tuple(paramv), guidv=tuple(guidv))
+        return g
+
+    def map_get(self, map_id: Any, index: int) -> Any:
+        """``ocrMapGet``: returns a LID immediately; never blocks (§4)."""
+        m = self.rt.resolve(map_id)
+        owner = self.rt._owner(m)
+        lid = self.rt._alloc_lid(self.node)
+        self.rt.send(MMapGet(map_id=m, index=index, lid=lid),
+                     self.node, owner, at=self.now)
+        return lid
+
+    def map_destroy(self, map_id: Any) -> None:
+        self.rt.send(MDestroy(target=self.rt.resolve(map_id)),
+                     self.node, self.rt._owner(map_id), at=self.now)
+
+    # -- file IO (§5) -----------------------------------------------------------------
+
+    def file_open(self, path: str, mode: str = "rb") -> Tuple[Guid, Guid]:
+        """``ocrFileOpen``: returns (file guid, descriptor-db guid).  The
+        descriptor satisfies dependences only once the (async) open completes."""
+        if mode not in ("rb", "rb+", "wb+"):
+            raise FileModeError(f"unsupported file mode {mode!r}")
+        g = self.rt._alloc_guid(self.node, ObjectKind.FILE)
+        f = FileObj(guid=g, path=path, mode=mode)
+        if mode == "wb+":
+            with open(path, "w+b"):
+                pass
+        self.rt.nodes[self.node].objects[g] = f
+        desc, _ = self.db_create(16)
+        d: DbObj = self.rt.lookup(desc)
+        d.ready = False
+        f.descriptor_db = desc
+        size = _file_size(path)
+        self.rt.send(MFileOpened(file_guid=g, descriptor_db=desc, size=size),
+                     self.node, self.node, at=self.now + self.rt.io_latency)
+        return g, desc
+
+    @staticmethod
+    def file_get_size(descriptor_ptr: np.ndarray) -> int:
+        size, _ = struct.unpack("<QQ", bytes(descriptor_ptr[:16]))
+        return size
+
+    def file_get_guid(self, descriptor_ptr: np.ndarray) -> Guid:
+        _, key = struct.unpack("<QQ", bytes(descriptor_ptr[:16]))
+        return self.rt.file_registry[key]
+
+    def file_get_chunk(self, file: Any, offset: int, size: int) -> Guid:
+        """``ocrFileGetChunk``: map a contiguous file range into a data block."""
+        f: FileObj = self.rt.lookup(self.rt.resolve(file))
+        if f.closed:
+            raise OcrError(f"file {f.guid} already closed")
+        if f.chunk_overlaps(offset, size):
+            raise ChunkOverlapError(
+                f"chunk [{offset},+{size}) overlaps a live chunk of {f.guid}")
+        if offset + size > f.size and not f.writable:
+            raise FileModeError(
+                f"chunk [{offset},+{size}) extends past EOF of read-only file")
+        g = self.rt._alloc_guid(self.node, ObjectKind.DATABLOCK)
+        db = DbObj(guid=g, size=size, node=self.node, file_guid=f.guid,
+                   file_offset=offset, lazy_file_read=True)
+        db.ready = True
+        db.pending_deps = []
+        self.rt.nodes[self.node].objects[g] = db
+        f.chunks[g] = (offset, size)
+        return g
+
+    def file_release(self, file: Any) -> None:
+        f: FileObj = self.rt.lookup(self.rt.resolve(file))
+        f.released = True
+        if not f.chunks:
+            f.closed = True
+
+    # -- identity (§3) -------------------------------------------------------------------
+
+    @staticmethod
+    def get_id_type(x: Any) -> IdType:
+        return id_type(x)
+
+    def get_guid(self, x: Any) -> Guid:
+        """``ocrGetGuid`` — the single blocking call of the API (§3)."""
+        if isinstance(x, Guid):
+            return x
+        if isinstance(x, Lid):
+            return self.rt.force_resolve(x, self)
+        raise OcrError(f"not an identifier: {x!r}")
+
+    # -- control --------------------------------------------------------------------------
+
+    def shutdown(self) -> None:
+        self.rt.shutdown_requested = True
+
+
+def spawn_main(rt: Runtime, func: Callable, paramv: Sequence[Any] = (),
+               node: int = 0, duration: float = 1.0) -> Guid:
+    """Create and immediately schedule the ``mainEdt`` equivalent."""
+    ctx = TaskCtx(rt, node, None)
+    tmpl = ctx.edt_template_create(func, len(paramv), 0)
+    guid, _ = ctx.edt_create(tmpl, paramv=paramv, depv=[], duration=duration,
+                             placement=node)
+    return guid

@@ -1,0 +1,1 @@
+from .pipeline import SyntheticTokens, FileTokens, make_batch

@@ -1,0 +1,88 @@
+"""jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU, so
+the same call sites work in tests and on hardware.  Layout adaptation from
+model conventions (B, S, H, hd) to kernel conventions (B, H, S, hd) lives
+here, not in model code.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import flash_decode as _fd
+from . import partition_copy as _pc
+from . import ssd_scan as _ssd
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    block_k=128, interpret=None):
+    """Model layout: q (B,S,H,hd), k/v (B,S,KH,hd) → (B,S,H,hd)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=interpret)
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=None):
+    """Model layout: x (B,S,H,P), dt (B,S,H), B/C (B,S,N).
+
+    Returns (y (B,S,H,P), state (B,H,P,N)).
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    xt = jnp.transpose(x, (0, 2, 1, 3))
+    dtt = jnp.transpose(dt, (0, 2, 1))
+    y, st = _ssd.ssd_scan(xt, dtt, A, B, C, chunk=chunk, interpret=interpret)
+    return jnp.transpose(y, (0, 2, 1, 3)), st
+
+
+@functools.partial(jax.jit, static_argnames=("dst_off", "src_off", "size",
+                                             "interpret"))
+def partition_copy_bytes(dst, src, *, dst_off, src_off, size, interpret=None):
+    """§6.3 fallback copy on flat byte buffers (lengths multiple of 128·256).
+
+    dst/src: (N,) uint8.  Returns new dst with src[src_off:src_off+size]
+    written at dst_off.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    lanes = _pc.LANES
+    block = 256 * lanes
+    assert dst.shape[0] % lanes == 0 and src.shape[0] % lanes == 0
+    assert dst_off % block == 0 and src_off % block == 0 and size % block == 0
+    d2 = dst.reshape(-1, lanes)
+    s2 = src.reshape(-1, lanes)
+    out = _pc.partition_copy(d2, s2, dst_off // lanes, src_off // lanes,
+                             size // lanes, interpret=interpret)
+    return out.reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_s",
+                                             "interpret"))
+def flash_decode(q, k_cache, v_cache, cur_len, *, window=0, block_s=512,
+                 interpret=None):
+    """Serving layout: q (B,1,H,hd), head-major caches (B,KH,S,hd).
+
+    Returns (B, 1, H, hd_v).  cur_len = valid entries incl. the new token.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    b, one, h, hd = q.shape
+    kh = k_cache.shape[1]
+    g = h // kh
+    qg = q.reshape(b, kh, g, hd)
+    out = _fd.flash_decode(qg, k_cache, v_cache, cur_len, window=window,
+                           block_s=block_s, interpret=interpret)
+    return out.reshape(b, 1, h, out.shape[-1])

@@ -1,0 +1,58 @@
+"""Pallas TPU kernel materializing §6.3 ``ocrDbCopy(DB_COPY_PARTITION)``.
+
+When the zero-copy view path is unavailable (partition crosses a device
+boundary, or the runtime chose to materialize), the copy itself is the
+fallback.  This kernel is that fallback as a TPU-native tiled HBM→HBM copy:
+lane-aligned (rows × 128) tiles staged through VMEM, offsets expressed in
+tiles — i.e. the §6.2 rule "partitions are contiguous, non-overlapping
+ranges" becomes "tile-aligned row ranges".
+
+dst/src are 2-D (N, 128) views of the flat byte buffers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES = 128
+
+
+def _copy_kernel(src_ref, dst_in_ref, o_ref):
+    del dst_in_ref  # aliased with o_ref; untouched tiles keep dst contents
+    o_ref[...] = src_ref[...]
+
+
+def partition_copy(dst: jax.Array, src: jax.Array, dst_off_rows: int,
+                   src_off_rows: int, rows: int, *, block_rows: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """Copy ``rows`` rows of ``src`` (from src_off_rows) into ``dst`` at
+    dst_off_rows.  Rows are (·, 128) lanes.  Returns the new dst.
+
+    Offsets and length must be multiples of ``block_rows`` (the §6.2
+    partition-granularity constraint, tile-aligned on TPU); ops.py pads.
+    """
+    assert dst.shape[1] == LANES and src.shape[1] == LANES
+    block_rows = min(block_rows, rows)
+    assert rows % block_rows == 0
+    assert dst_off_rows % block_rows == 0 and src_off_rows % block_rows == 0
+    nb = rows // block_rows
+    d_base = dst_off_rows // block_rows
+    s_base = src_off_rows // block_rows
+
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block_rows, LANES),
+                               lambda i: (s_base + i, 0)),
+                  pl.BlockSpec((block_rows, LANES),
+                               lambda i: (d_base + i, 0))],
+        out_specs=pl.BlockSpec((block_rows, LANES),
+                               lambda i: (d_base + i, 0)),
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        input_output_aliases={1: 0},
+        interpret=interpret,
+    )(src, dst)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import full_attention
+from repro.models.mamba import ssd_chunked, ssd_reference
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,H,S,hd), k/v: (B,KH,S,hd) — same layout as the kernel."""
+    qt = jnp.transpose(q, (0, 2, 1, 3))
+    kt = jnp.transpose(k, (0, 2, 1, 3))
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    out = full_attention(qt, kt, vt, causal=causal, window=window)
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+def ssd_scan_ref(x, dt, A, B, C, chunk):
+    """Chunked SSD oracle (itself validated against ssd_reference)."""
+    return ssd_chunked(x, dt, A, B, C, chunk)
+
+
+ssd_scan_sequential = ssd_reference
+
+
+def partition_copy_ref(dst, src, dst_off_rows, src_off_rows, rows):
+    """Row-tiled §6.3 partition copy oracle.  dst/src: (N, 128) views."""
+    block = jax.lax.dynamic_slice(src, (src_off_rows, 0),
+                                  (rows, src.shape[1]))
+    return jax.lax.dynamic_update_slice(dst, block.astype(dst.dtype),
+                                        (dst_off_rows, 0))
+
+
+def flash_decode_ref(q, k_cache, v_cache, cur_len, window=0):
+    """q (B,1,H,hd); head-major caches (B,KH,S,hd); oracle via the
+    seq-major decode_attention."""
+    import jax.numpy as jnp
+    from repro.models.attention import decode_attention
+    kt = jnp.transpose(k_cache, (0, 2, 1, 3))
+    vt = jnp.transpose(v_cache, (0, 2, 1, 3))
+    return decode_attention(q, kt, vt, cur_len=cur_len, window=window)

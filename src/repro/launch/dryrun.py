@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch × shape × mesh) cell.
+
+For each cell this lowers the real step function (train_step for train
+shapes, prefill/decode for serving shapes) against ShapeDtypeStruct inputs
+on the production mesh, compiles it, prints ``memory_analysis`` /
+``cost_analysis``, parses collective traffic out of the SPMD HLO, and
+appends the roofline terms to a JSON artifact consumed by
+``benchmarks/bench_roofline.py`` and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --all                    # single-pod table
+  python -m repro.launch.dryrun --all --multi-pod        # 2-pod pass
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import all_arch_names, get_config
+from repro.configs.base import SHAPES, applicable, shape_by_name
+from repro.dist.sharding import ShardCtx, use_mesh
+from repro.launch import hlo_analysis as ha
+from repro.launch import specs as sp
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import LanguageModel
+from repro.optim import OptimizerConfig
+from repro.train.steps import make_train_step
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results", "dryrun.json")
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        out[k] = float(getattr(mem, k, 0.0))
+    return out
+
+
+def lower_cell(cfg, shape, mesh, ctx: ShardCtx):
+    """Build (lowered, compiled) for one cell."""
+    import dataclasses
+    if shape.kind != "train":
+        # serving keeps weights in the compute dtype (no fp32 masters)
+        cfg = dataclasses.replace(cfg, param_dtype=cfg.dtype)
+    model = LanguageModel(cfg)
+    oc = OptimizerConfig(
+        state_dtype=cfg.optimizer_state_dtype,
+        accum_steps=cfg.train_accum_steps,
+        accum_dtype="bfloat16" if cfg.optimizer_state_dtype == "int8"
+        else "float32")
+
+    if shape.kind == "train":
+        step = make_train_step(model, oc)
+        state_shapes = sp.state_specs(cfg, oc)
+        state_sh = sp.state_shardings(cfg, oc, ctx)
+        batch_shapes = sp.batch_specs(cfg, shape)
+        batch_sh = sp.batch_shardings(cfg, shape, ctx)
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state_shapes, batch_shapes)
+    elif shape.kind == "prefill":
+        params_shapes = sp.params_only_specs(cfg)
+        params_sh = sp.param_shardings(params_shapes, ctx) \
+            if hasattr(sp, "param_shardings") else None
+        from repro.dist.sharding import param_shardings
+        params_sh = param_shardings(params_shapes, ctx)
+        batch_shapes = sp.batch_specs(cfg, shape)
+        batch_sh = sp.batch_shardings(cfg, shape, ctx)
+        fn = jax.jit(model.prefill, in_shardings=(params_sh, batch_sh))
+        lowered = fn.lower(params_shapes, batch_shapes)
+    else:  # decode
+        params_shapes = sp.params_only_specs(cfg)
+        from repro.dist.sharding import param_shardings
+        params_sh = param_shardings(params_shapes, ctx)
+        cache_shapes = model.cache_spec(shape.global_batch, shape.seq_len)
+        cache_sh = sp.cache_shardings(cache_shapes, ctx)
+        tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, ctx.spec(tok.shape, "dp", None))
+        cur = jax.ShapeDtypeStruct((), jnp.int32)
+        cur_sh = NamedSharding(mesh, P())
+        fn = jax.jit(model.decode_step,
+                     in_shardings=(params_sh, cache_sh, tok_sh, cur_sh),
+                     donate_argnums=(1,))
+        lowered = fn.lower(params_shapes, cache_shapes, tok, cur)
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = shape_by_name(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    num_chips = mesh.size
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "skipped",
+    }
+    if not applicable(cfg, shape):
+        rec["reason"] = "long_500k needs sub-quadratic arch (DESIGN.md)"
+        return rec
+    t0 = time.time()
+    with use_mesh(mesh, pure_dp=cfg.pure_dp) as ctx:
+        lowered = lower_cell(cfg, shape, mesh, ctx)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        hlo = compiled.as_text()
+        # trip-count-aware parse (cost_analysis counts while bodies once)
+        from repro.launch import hlo_cost
+        parsed = hlo_cost.analyze(hlo)
+        mf = ha.model_flops(cfg, shape)
+        coll = {"per_kind": parsed.coll_bytes, "counts": parsed.coll_counts,
+                "total": parsed.coll_total}
+        rl = ha.roofline({"flops": parsed.flops,
+                          "bytes accessed": parsed.bytes},
+                         coll, mf, num_chips)
+
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_dict(mem),
+        "cost_analysis_raw": {k: float(v) for k, v in cost.items()
+                              if isinstance(v, (int, float))},
+        "collectives": {"per_kind": coll["per_kind"],
+                        "counts": coll["counts"], "total": coll["total"]},
+        "roofline": rl.as_dict(),
+    })
+    if verbose:
+        print(f"== {arch} × {shape_name} × {rec['mesh']} ==")
+        print("  memory_analysis:", json.dumps(rec["memory"]))
+        print("  parsed cost: flops={:.3e} bytes={:.3e} (raw cost_analysis "
+              "flops={:.3e})".format(
+                  rl.flops, rl.hbm_bytes,
+                  rec["cost_analysis_raw"].get("flops", 0)))
+        print("  collectives:", json.dumps(rec["collectives"]["per_kind"]))
+        print("  roofline: compute={:.4f}s memory={:.4f}s coll={:.4f}s "
+              "dominant={} useful={:.2f}".format(
+                  rl.compute_s, rl.memory_s, rl.collective_s, rl.dominant,
+                  rl.useful_ratio))
+        print(f"  (lower {t_lower:.0f}s, compile {t_compile:.0f}s)")
+    return rec
+
+
+def load_results(path: str) -> Dict[str, Any]:
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return {"cells": {}}
+
+
+def save_results(path: str, res: Dict[str, Any]) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--redo", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_path = args.out or os.path.normpath(RESULTS)
+    results = load_results(out_path)
+
+    if args.all:
+        cells = [(a, s.name) for a in all_arch_names() for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in cells:
+        keyname = f"{arch}|{shape_name}|{'2x16x16' if args.multi_pod else '16x16'}"
+        if not args.redo and results["cells"].get(keyname, {}).get("status") == "ok":
+            print(f"-- cached: {keyname}")
+            continue
+        try:
+            rec = run_cell(arch, shape_name, args.multi_pod)
+        except Exception as e:  # record failures: they are bugs to fix
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape_name,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}"}
+            failures.append(keyname)
+        results["cells"][keyname] = rec
+        save_results(out_path, results)
+    print(f"\nwrote {out_path}")
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""Roofline terms from compiled AOT artifacts.
+
+``cost_analysis()`` supplies HLO FLOPs and bytes; collective traffic is NOT
+in cost_analysis, so ``collective_bytes`` parses the post-SPMD HLO text and
+sums operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|f16|bf16|s32|u32|f32|s64|u64"
+                       r"|f64|c64|c128)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|tuple\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum operand bytes per collective kind from post-SPMD HLO text."""
+    per_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    largest: Tuple[int, str] = (0, "")
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        if "-done(" in line:
+            continue  # paired with -start; avoid double count
+        # operand shapes appear inside the call parens, after the op name
+        args = line[m.end():]
+        total = 0
+        for sm in _SHAPE_RE.finditer(args):
+            total += _shape_bytes(sm.group(1), sm.group(2))
+        per_kind[kind] += total
+        counts[kind] += 1
+        if total > largest[0]:
+            largest = (total, line.strip()[:160])
+    return {"per_kind": per_kind, "counts": counts,
+            "total": sum(per_kind.values()), "largest": largest}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device HLO bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float           # 6·N·D useful flops (per device)
+    useful_ratio: float
+
+    def as_dict(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def roofline(cost: Dict[str, float], coll: Dict[str, Any],
+             model_flops_total: float, num_chips: int,
+             links_per_chip: float = 3.0) -> Roofline:
+    """Build the three-term roofline for one compiled cell.
+
+    ``cost`` is compiled.cost_analysis() (per-device program).
+    ``model_flops_total`` is the whole-step useful FLOPs (6·N·D·tokens…);
+    divided by chips for the per-device ratio.
+    """
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll_b = float(coll["total"])
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = coll_b / (ICI_BW * links_per_chip)
+    dom = max((("compute", compute_s), ("memory", memory_s),
+               ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    mf = model_flops_total / num_chips
+    return Roofline(flops=flops, hbm_bytes=hbm, coll_bytes=coll_b,
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=coll_s, dominant=dom,
+                    model_flops=mf,
+                    useful_ratio=(mf / flops if flops else 0.0))
+
+
+# ------------------------------------------------------- model FLOPs (6·N·D)
+
+def param_count(cfg) -> Tuple[float, float]:
+    """Returns (total_params, active_params) analytically from the config."""
+    d, v = cfg.d_model, cfg.vocab_size
+    emb = v * d
+    head = 0 if cfg.tie_embeddings else d * v
+    per_attn = (d * cfg.num_heads * cfg.head_dim
+                + 2 * d * cfg.num_kv_heads * cfg.head_dim
+                + cfg.num_heads * cfg.head_dim * d)
+    if cfg.use_mla:
+        dn, dr, dv_ = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        per_attn = (d * cfg.q_lora_rank
+                    + cfg.q_lora_rank * cfg.num_heads * (dn + dr)
+                    + d * (cfg.kv_lora_rank + dr)
+                    + cfg.kv_lora_rank * cfg.num_heads * (dn + dv_)
+                    + cfg.num_heads * dv_ * d)
+    per_mlp = 3 * d * cfg.d_ff
+    per_moe_expert = 3 * d * (cfg.moe_d_ff or cfg.d_ff)
+    per_shared = 3 * d * (cfg.moe_d_ff or cfg.d_ff) * cfg.num_shared_experts
+    per_mamba = 0
+    if cfg.ssm_state:
+        di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per_mamba = (2 * d * di + 2 * d * n + d * h
+                     + cfg.conv_kernel * (di + 2 * n) + di * d)
+
+    total = emb + head
+    active = emb + head
+    L = cfg.num_layers
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        total += L * (per_attn + per_mlp)
+        active = total
+    elif fam == "moe":
+        n_moe = L - cfg.first_k_dense
+        dense_ff = 12288 if cfg.use_mla and cfg.d_model == 5120 else cfg.d_ff
+        total += cfg.first_k_dense * (per_attn + 3 * d * dense_ff)
+        active += cfg.first_k_dense * (per_attn + 3 * d * dense_ff)
+        per_layer_total = (per_attn + cfg.num_experts * per_moe_expert
+                           + per_shared
+                           + (per_mlp if cfg.moe_dense_residual else 0))
+        per_layer_active = (per_attn
+                            + cfg.experts_per_token * per_moe_expert
+                            + per_shared
+                            + (per_mlp if cfg.moe_dense_residual else 0))
+        total += n_moe * per_layer_total
+        active += n_moe * per_layer_active
+    elif fam == "ssm":
+        total += L * per_mamba
+        active = total
+    elif fam == "hybrid":
+        g = L // cfg.attn_every
+        total += L * per_mamba + (per_attn + per_mlp)      # shared block once
+        active = emb + head + L * per_mamba + g * (per_attn + per_mlp)
+    elif fam == "encdec":
+        enc_attn = 4 * d * cfg.num_heads * cfg.head_dim
+        total += cfg.num_encoder_layers * (enc_attn + 2 * d * cfg.d_ff)
+        total += L * (per_attn + enc_attn + 2 * d * cfg.d_ff)
+        active = total
+    return float(total), float(active)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·D tokens for train; 2·N_active·D for inference steps."""
+    _, active = param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch

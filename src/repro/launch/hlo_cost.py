@@ -1,0 +1,378 @@
+"""Trip-count-aware cost model over post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE regardless of
+trip count — useless for scan-over-layers models (a 60-layer scan reports
+1/60th of the flops).  This module re-derives per-device cost from the HLO
+text itself:
+
+* computations are parsed into symbol tables (instruction → shape);
+* a call graph is built: ``while`` edges multiply by
+  ``backend_config.known_trip_count``, ``fusion(..., calls=%c)`` edges count
+  flops (dots can live inside fusions) but not bytes (fusion internals stay
+  in registers);
+* dot flops = 2 · |result| · K (contracting dims from the lhs operand's
+  shape), exact for the matmul-dominated models here;
+* HBM bytes = Σ over executed instructions of (operand + result bytes),
+  with in-place special cases (dynamic-update-slice counts 2·|update|,
+  gather/scatter count touched bytes, not whole operands);
+* collective *operand* bytes per kind, derived from result shapes and
+  replica-group sizes (all-gather operand = result/g, reduce-scatter
+  operand = result·g).
+
+Validated against analytic 6·N·D estimates in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"^\s*([a-z][\w\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+_SKIP_BYTES = {
+    "parameter", "constant", "iota", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "rng-get-and-update-state", "opt-barrier",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(segment: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(segment):
+        total += _shape_elems(m.group(2)) * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _shape_dims(segment: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(segment):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    op: str
+    result_seg: str           # text between '=' and op name (result type)
+    args_seg: str             # inside the op's parens
+    meta_seg: str             # after the parens (configs, dims, groups)
+    line: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: List[_Instr]
+    symtab: Dict[str, str]    # instr name -> result type segment
+
+
+def _parse_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m and line.rstrip().endswith("{"):
+                cur = _Computation(m.group(2), [], {})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = None
+        # find op token: first lowercase word followed by '(' after the type
+        # result type is either "(tuple...)" or "dtype[...]..." prefix
+        if rest.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            result_seg = rest[: i + 1]
+            tail = rest[i + 1:]
+        else:
+            sp = rest.find(" ")
+            result_seg = rest[:sp] if sp > 0 else rest
+            tail = rest[sp + 1:] if sp > 0 else ""
+        om = _OPNAME_RE.match(tail)
+        if not om:
+            cur.symtab[name] = result_seg
+            continue
+        op = om.group(1)
+        rest2 = tail[om.end():]         # after the op's '('
+        depth = 1
+        for i, ch in enumerate(rest2):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        args_seg = rest2[:i]
+        meta_seg = rest2[i + 1:]
+        cur.instrs.append(_Instr(name, op, result_seg, args_seg, meta_seg,
+                                 line))
+        cur.symtab[name] = result_seg
+    return comps
+
+
+def _group_size(meta: str, line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _dot_flops(instr: _Instr, symtab: Dict[str, str]) -> float:
+    result_elems = sum(_shape_elems(m.group(2))
+                       for m in _SHAPE_RE.finditer(instr.result_seg))
+    kdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.meta_seg)
+    ops = _OPERAND_RE.findall(instr.args_seg)
+    if not kdims or not ops:
+        return 2.0 * result_elems
+    lhs_seg = symtab.get(ops[0], "")
+    lhs = _shape_dims(lhs_seg)
+    if not lhs:
+        return 2.0 * result_elems
+    dims = lhs[0][1]
+    k = 1
+    for idx in kdims.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            k *= dims[int(idx)]
+    return 2.0 * result_elems * k
+
+
+def _conv_flops(instr: _Instr, symtab: Dict[str, str]) -> float:
+    result_elems = sum(_shape_elems(m.group(2))
+                       for m in _SHAPE_RE.finditer(instr.result_seg))
+    ops = _OPERAND_RE.findall(instr.args_seg)
+    if len(ops) < 2:
+        return 2.0 * result_elems
+    ker = _shape_dims(symtab.get(ops[1], ""))
+    kelems = _shape_elems(",".join(map(str, ker[0][1]))) if ker else 1
+    return 2.0 * result_elems * kelems
+
+
+def _instr_bytes(instr: _Instr, symtab: Dict[str, str],
+                 dus_fusions: Optional[Dict[str, float]] = None) -> float:
+    """HBM traffic model: every materialized result is written once and
+    read ≥ once downstream → 2 × result bytes, with in-place special cases.
+    (Counting full operand bytes per consumer would triple-count buffers
+    consumed by several cheap ops.)
+    """
+    op = instr.op
+    if op in _SKIP_BYTES:
+        return 0.0
+    if op == "fusion" and dus_fusions is not None:
+        # fusions rooted at dynamic-update-slice update in place: count the
+        # update bytes, not the whole aliased result buffer
+        fm = re.search(r"calls=%([\w.\-]+)", instr.line)
+        if fm and fm.group(1) in dus_fusions:
+            return 2.0 * dus_fusions[fm.group(1)] + 64
+    result_b = _shapes_bytes(instr.result_seg)
+    operand_names = _OPERAND_RE.findall(instr.args_seg)
+    if op == "dynamic-update-slice":
+        upd = (_shapes_bytes(symtab.get(operand_names[1], ""))
+               if len(operand_names) > 1 else result_b)
+        return 2.0 * upd + 64
+    if op == "gather":
+        idx = (_shapes_bytes(symtab.get(operand_names[1], ""))
+               if len(operand_names) > 1 else 0)
+        return 2.0 * result_b + idx
+    if op == "scatter":
+        upd = (_shapes_bytes(symtab.get(operand_names[2], ""))
+               if len(operand_names) > 2 else result_b)
+        idx = (_shapes_bytes(symtab.get(operand_names[1], ""))
+               if len(operand_names) > 1 else 0)
+        return 2.0 * upd + idx
+    if op.startswith("all-gather"):
+        g = _group_size(instr.meta_seg, instr.line)
+        return result_b / max(g, 1) + result_b
+    if op.startswith("reduce-scatter"):
+        g = _group_size(instr.meta_seg, instr.line)
+        return result_b * g + result_b
+    if op == "dot":
+        # MXU reads both operands from HBM (streamed once) + writes result
+        operand_b = sum(_shapes_bytes(symtab.get(n, ""))
+                        for n in operand_names)
+        return result_b + operand_b
+    return 2.0 * result_b
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    coll_counts: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+def analyze(text: str, entry_name: Optional[str] = None) -> HloCost:
+    comps = _parse_computations(text)
+    # find entry
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    if entry is None or entry not in comps:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+
+    # computations rooted at dynamic-update-slice — directly or as a tuple
+    # of DUS outputs (multi-output fusions) — update in place when fused:
+    # map name -> total update-operand bytes
+    dus_fusions: Dict[str, float] = {}
+    for cname, comp in comps.items():
+        if not comp.instrs:
+            continue
+        by_name = {i.name: i for i in comp.instrs}
+
+        def _as_dus(instr):
+            """The instr, looked through dtype-convert wrappers (the CPU
+            backend legalizes bf16 DUS chains as convert∘DUS∘convert —
+            a TPU build updates in place with native bf16)."""
+            seen = 0
+            while instr is not None and instr.op == "convert" and seen < 3:
+                ops_ = _OPERAND_RE.findall(instr.args_seg)
+                instr = by_name.get(ops_[0]) if ops_ else None
+                seen += 1
+            if instr is not None and instr.op == "dynamic-update-slice":
+                return instr
+            return None
+
+        root = comp.instrs[-1]
+        roots = [root]
+        if root.op == "tuple":
+            roots = [by_name[n] for n in _OPERAND_RE.findall(root.args_seg)
+                     if n in by_name]
+        total = 0.0
+        ok = bool(roots)
+        for r in roots:
+            dus = _as_dus(r)
+            if dus is None:
+                ok = False
+                break
+            ops_ = _OPERAND_RE.findall(dus.args_seg)
+            if len(ops_) > 1:
+                total += _shapes_bytes(comp.symtab.get(ops_[1], ""))
+            else:
+                ok = False
+                break
+        if ok:
+            dus_fusions[cname] = total
+
+    # multiplicities: (computation, flops_only) -> count
+    mult: Dict[str, float] = {entry: 1.0}
+    flops_only: Dict[str, bool] = {entry: False}
+    order = [entry]
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        cm = mult[cname]
+        conly = flops_only[cname]
+        for ins in comp.instrs:
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trips = float(tm.group(1)) if tm else 1.0
+                bm = re.search(r"body=%([\w.\-]+)", ins.line)
+                if bm:
+                    b = bm.group(1)
+                    mult[b] = mult.get(b, 0.0) + cm * trips
+                    flops_only[b] = conly and flops_only.get(b, True)
+                    if b not in order:
+                        order.append(b)
+                    elif mult[b] > cm * trips:  # re-walk for accumulated mult
+                        pass
+            elif ins.op in ("fusion", "call"):
+                fm = re.search(r"(?:calls|to_apply)=%([\w.\-]+)", ins.line)
+                if fm:
+                    f = fm.group(1)
+                    mult[f] = mult.get(f, 0.0) + cm
+                    flops_only[f] = True  # fusion internals: flops yes, bytes no
+                    if f not in order:
+                        order.append(f)
+            elif ins.op == "conditional":
+                for br in re.findall(r"(?:branch_computations=\{([^}]*)\}|"
+                                     r"(?:true|false)_computation=%([\w.\-]+))",
+                                     ins.line):
+                    names = (br[0].split(",") if br[0] else [br[1]])
+                    for nm in names:
+                        nm = nm.strip().lstrip("%")
+                        if nm:
+                            mult[nm] = mult.get(nm, 0.0) + cm
+                            flops_only[nm] = conly
+                            if nm not in order:
+                                order.append(nm)
+
+    cost = HloCost()
+    for cname, cm in mult.items():
+        comp = comps.get(cname)
+        if comp is None or cm == 0:
+            continue
+        conly = flops_only.get(cname, False)
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                cost.flops += cm * _dot_flops(ins, comp.symtab)
+            elif ins.op == "convolution":
+                cost.flops += cm * _conv_flops(ins, comp.symtab)
+            for ck in _COLLECTIVES:
+                if ins.op == ck or ins.op == ck + "-start":
+                    g = _group_size(ins.meta_seg, ins.line)
+                    rb = _shapes_bytes(ins.result_seg)
+                    if ck == "all-gather":
+                        ob = rb / max(g, 1)
+                    elif ck == "reduce-scatter":
+                        ob = rb * g
+                    else:
+                        ob = rb
+                    cost.coll_bytes[ck] += cm * ob
+                    cost.coll_counts[ck] += cm
+            if not conly:
+                cost.bytes += cm * _instr_bytes(ins, comp.symtab, dus_fusions)
+    return cost

@@ -1,0 +1,25 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches JAX device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any jax
+import and then calls this.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips when ``multi_pod``."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over the actually-available devices (tests/examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

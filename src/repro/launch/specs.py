@@ -1,0 +1,106 @@
+"""ShapeDtypeStruct stand-ins and sharding trees for every dry-run cell.
+
+``input_specs(cfg, shape)`` returns the model inputs for a cell without any
+device allocation; ``*_shardings`` derive NamedSharding trees from the
+logical rules in ``repro.dist.sharding``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import ShardCtx, param_shardings
+from repro.models.model import LanguageModel
+from repro.optim import OptimizerConfig, init_opt_state
+from repro.train.steps import init_train_state
+
+S = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs for one cell."""
+    b, s = shape.global_batch, shape.seq_len
+    bf = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    out: Dict[str, Any] = {}
+    s_text = s
+    if cfg.family == "vlm":
+        s_text = s - cfg.num_patches
+        out["patches"] = S((b, cfg.num_patches, cfg.d_model), bf)
+    if cfg.family == "encdec":
+        out["frames"] = S((b, cfg.encoder_seq, cfg.d_model), bf)
+    out["tokens"] = S((b, s_text), jnp.int32)
+    if shape.kind == "train":
+        out["targets"] = S((b, s_text), jnp.int32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, ctx: ShardCtx
+                    ) -> Dict[str, Any]:
+    specs = batch_specs(cfg, shape)
+
+    def shard(leaf):
+        dims = [None] * len(leaf.shape)
+        return NamedSharding(ctx.mesh,
+                             ctx.spec(leaf.shape, "dp", *dims[1:]))
+
+    return jax.tree_util.tree_map(shard, specs)
+
+
+def state_specs(cfg: ModelConfig, oc: OptimizerConfig) -> Any:
+    model = LanguageModel(cfg)
+    return jax.eval_shape(
+        lambda k: init_train_state(model, k, oc), jax.random.PRNGKey(0))
+
+
+def state_shardings(cfg: ModelConfig, oc: OptimizerConfig, ctx: ShardCtx
+                    ) -> Any:
+    shapes = state_specs(cfg, oc)
+    params_sh = param_shardings(shapes["params"], ctx)
+    m_sh = param_shardings(shapes["opt"]["m"], ctx)
+    v_sh = param_shardings(shapes["opt"]["v"], ctx)
+    step_sh = NamedSharding(ctx.mesh, P())
+    return {"params": params_sh,
+            "opt": {"m": m_sh, "v": v_sh, "step": step_sh}}
+
+
+# ------------------------------------------------------------- decode cache
+
+_CACHE_RULES = {
+    # leaf name -> logical axes for the *trailing* dims (leading stack dims None)
+    "k": (None, "dp", None, "kv_seq", None),      # head-major (B,K,S,hd)
+    "v": (None, "dp", None, "kv_seq", None),
+    "c_kv": (None, "dp", "kv_seq", None),
+    "k_rope": (None, "dp", "kv_seq", None),
+    "cross_k": (None, "dp", None, None, None),
+    "cross_v": (None, "dp", None, None, None),
+    "conv_x": (None, "dp", None, "tp"),
+    "conv_B": (None, "dp", None, None),
+    "conv_C": (None, "dp", None, None),
+    "state": (None, "dp", "tp", None, None),
+}
+
+
+def cache_shardings(cache_tree: Any, ctx: ShardCtx) -> Any:
+    def leaf_sh(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        rule = _CACHE_RULES.get(name)
+        shape = leaf.shape
+        if rule is None:
+            return NamedSharding(ctx.mesh, P(*([None] * len(shape))))
+        pad = len(shape) - len(rule)
+        if pad < 0:
+            rule = rule[-len(shape):]
+            pad = 0
+        logical = (None,) * pad + rule
+        return NamedSharding(ctx.mesh, ctx.spec(shape, *logical))
+
+    return jax.tree_util.tree_map_with_path(leaf_sh, cache_tree)
+
+
+def params_only_specs(cfg: ModelConfig) -> Any:
+    model = LanguageModel(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))

@@ -1,0 +1,526 @@
+"""Attention variants: GQA (full / blockwise-flash / decode), SWA, MLA, cross.
+
+Layout conventions:
+  activations  x : (batch, seq, d_model)
+  q            : (batch, seq, n_heads, head_dim)
+  k, v         : (batch, seq, n_kv_heads, head_dim)
+  kv cache     : dict(k=(B, S_max, K, hd), v=(B, S_max, K, hd))
+  MLA cache    : dict(c_kv=(B, S_max, r), k_rope=(B, S_max, rd))
+
+The blockwise path is the sub-quadratic-memory jnp oracle of the Pallas
+flash kernel (`repro.kernels.flash_attention`); the dry-run lowers this
+path because TPU custom calls cannot lower on the CPU backend.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import Params, apply_rope, dense_init, rmsnorm, rmsnorm_init
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ GQA params
+
+def gqa_init(key, cfg, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    h, k_, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    keys = jax.random.split(key, 4)
+    from .layers import _dtype
+    dt = _dtype(cfg.param_dtype)
+    p = {
+        "w_q": dense_init(keys[0], d, (h, hd), dt),
+        "w_k": dense_init(keys[1], d, (k_, hd), dt),
+        "w_v": dense_init(keys[2], d, (k_, hd), dt),
+        "w_o": dense_init(keys[3], h * hd, (d,), dt).reshape(h, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h, hd), dtype=dt)
+        p["b_k"] = jnp.zeros((k_, hd), dtype=dt)
+        p["b_v"] = jnp.zeros((k_, hd), dtype=dt)
+    return p
+
+
+# ------------------------------------------------------- dense full attention
+
+def _causal_window_mask(sq: int, sk: int, offset: int, window: int) -> jax.Array:
+    """(sq, sk) boolean mask. offset = absolute position of q row 0 minus
+    absolute position of k col 0.  window==0 → plain causal."""
+    qi = jnp.arange(sq)[:, None] + offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window > 0:
+        m &= (qi - kj) < window
+    return m
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: int = 0,
+                   q_offset: int = 0) -> jax.Array:
+    """Dense reference attention with GQA head grouping.
+
+    q: (B,Sq,H,hd); k,v: (B,Sk,K,hd) with H = K*G.
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    hd_v = v.shape[-1]
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / np.sqrt(hd)
+    if causal:
+        mask = _causal_window_mask(sq, sk, q_offset, window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, h, hd_v)
+
+
+# -------------------------------------------------- blockwise flash attention
+
+def blockwise_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_k: int = 1024,
+                        q_offset: int = 0) -> jax.Array:
+    """Flash-style attention with O(S) memory: scan over KV blocks with an
+    online-softmax carry, vmapped over Q blocks.  jnp oracle of the Pallas
+    kernel; exact (up to fp assoc.) w.r.t. :func:`full_attention`."""
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    hd_v = v.shape[-1]
+    g = h // kh
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = 1.0 / np.sqrt(hd)
+
+    qb = q.reshape(b, nq, block_q, kh, g, hd)
+    kb = k.reshape(b, nk, block_k, kh, hd)
+    vb = v.reshape(b, nk, block_k, kh, hd_v)
+
+    def process_q_block(qi: jax.Array, q_block: jax.Array) -> jax.Array:
+        # q_block: (b, block_q, kh, g, hd)
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, k_block, v_block = inputs
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_block, k_block)
+            s = (s * scale).astype(jnp.float32)
+            if causal or window > 0:
+                qpos = qi * block_q + jnp.arange(block_q) + q_offset
+                kpos = kj * block_k + jnp.arange(block_k)
+                msk = kpos[None, :] <= qpos[:, None]
+                if window > 0:
+                    msk &= (qpos[:, None] - kpos[None, :]) < window
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v_block.dtype), v_block)
+            acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, block_q), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((b, kh, g, block_q), dtype=jnp.float32)
+        a0 = jnp.zeros((b, kh, g, block_q, hd_v), dtype=jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-37)[..., None]
+        # (b, kh, g, block_q, hd) -> (b, block_q, kh, g, hd)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))
+
+    out_blocks = jax.lax.map(
+        lambda args: process_q_block(*args),
+        (jnp.arange(nq), jnp.moveaxis(qb, 1, 0)))
+    out = jnp.moveaxis(out_blocks, 0, 1).reshape(b, sq, kh, g, hd_v)
+    return out.reshape(b, sq, h, hd_v).astype(q.dtype)
+
+
+# --------------------------------------- flash attention with O(S) backward
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attention_jnp(q, k, v, q_offset, causal=True, window=0,
+                        block_q=512, block_k=1024):
+    """Blockwise attention whose *backward* also runs tile-by-tile from the
+    saved LSE (O(S) memory) — differentiating the plain scan would stack
+    per-tile probabilities, i.e. O(S²).  jnp twin of the Pallas kernel's
+    custom gradient; used on all training paths.
+
+    ``q_offset`` is an f32 scalar *array* (it may be a traced
+    ``axis_index`` product under shard_map); its cotangent is zero.
+    """
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, block_q, block_k,
+                             q_offset)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, block_q, block_k, q_offset):
+    q_offset = jnp.asarray(q_offset).astype(jnp.int32)
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    hd_v = v.shape[-1]
+    g = h // kh
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    nq, nk = sq // block_q, sk // block_k
+    scale = 1.0 / np.sqrt(hd)
+    qb = jnp.moveaxis(q.reshape(b, nq, block_q, kh, g, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(b, nk, block_k, kh, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, block_k, kh, hd_v), 1, 0)
+
+    def q_block(args):
+        qi, q_blk = args
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inp
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk)
+            s = (s * scale).astype(jnp.float32)
+            if causal or window > 0:
+                qpos = qi * block_q + jnp.arange(block_q) + q_offset
+                kpos = kj * block_k + jnp.arange(block_k)
+                msk = kpos[None, :] <= qpos[:, None]
+                if window > 0:
+                    msk &= (qpos[:, None] - kpos[None, :]) < window
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v_blk.dtype), v_blk)
+            return (m_new, l_new, acc * alpha[..., None] + pv.astype(jnp.float32)), None
+
+        m0 = jnp.full((b, kh, g, block_q), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((b, kh, g, block_q), dtype=jnp.float32)
+        a0 = jnp.zeros((b, kh, g, block_q, hd_v), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nk), kb, vb))
+        l = jnp.maximum(l, 1e-37)
+        o = (acc / l[..., None])
+        lse = m + jnp.log(l)
+        return jnp.transpose(o, (0, 3, 1, 2, 4)), lse   # (b,bq,kh,g,hd)
+
+    outs, lses = jax.lax.map(q_block, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, hd_v).astype(q.dtype)
+    lse = jnp.moveaxis(lses, 0, 3)      # (b,kh,g,nq,block_q) -> wait below
+    # lses: (nq, b, kh, g, block_q) -> (b, kh, g, sq)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(b, kh, g, sq)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, q_offset, causal, window, block_q, block_k):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, block_q, block_k,
+                               q_offset)
+    return out, (q, k, v, out, lse, q_offset)
+
+
+def _flash_bwd(causal, window, block_q, block_k, res, do):
+    q, k, v, out, lse, q_offset = res
+    q_offset = jnp.asarray(q_offset).astype(jnp.int32)
+    b, sq, h, hd = q.shape
+    _, sk, kh, _ = k.shape
+    hd_v = v.shape[-1]
+    g = h // kh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    nq, nk = sq // bq, sk // bk
+    scale = 1.0 / np.sqrt(hd)
+
+    qg = q.reshape(b, nq, bq, kh, g, hd)
+    dog = do.reshape(b, nq, bq, kh, g, hd_v)
+    lseg = lse.reshape(b, kh, g, nq, bq)
+    # delta_i = rowsum(do * out): computed elementwise on the UNBLOCKED
+    # arrays — expressing it as a dot over the blocked layout makes GSPMD
+    # fully rematerialize head-sharded operands (observed 4.3 GB/device
+    # replicated copies on deepseek-v2)
+    delta_flat = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                         axis=-1)                      # (b, sq, h)
+    delta = jnp.transpose(delta_flat.reshape(b, sq, kh, g), (0, 2, 3, 1))
+    delta = delta.reshape(b, kh, g, nq, bq)
+
+    def q_step(carry, inp):
+        dk_acc, dv_acc = carry
+        qi, q_blk, do_blk, lse_blk, delta_blk = inp
+        # q_blk (b,bq,kh,g,hd); lse/delta (b,kh,g,bq)
+
+        def kv_step(carry2, inp2):
+            dq_blk = carry2
+            kj, k_blk, v_blk, dk_blk, dv_blk = inp2
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k_blk)
+            s = (s * scale).astype(jnp.float32)
+            if causal or window > 0:
+                qpos = qi * bq + jnp.arange(bq) + q_offset
+                kpos = kj * bk + jnp.arange(bk)
+                msk = kpos[None, :] <= qpos[:, None]
+                if window > 0:
+                    msk &= (qpos[:, None] - kpos[None, :]) < window
+                s = jnp.where(msk[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])               # (b,kh,g,bq,bk)
+            dp = jnp.einsum("bqkgh,bskh->bkgqs", do_blk,
+                            v_blk).astype(jnp.float32)
+            ds = p * (dp - delta_blk[..., None]) * scale
+            dq_blk = dq_blk + jnp.einsum("bkgqs,bskh->bqkgh",
+                                         ds.astype(k_blk.dtype), k_blk)
+            dk_blk = dk_blk + jnp.einsum("bkgqs,bqkgh->bskh",
+                                         ds.astype(q_blk.dtype), q_blk)
+            dv_blk = dv_blk + jnp.einsum("bkgqs,bqkgh->bskh",
+                                         p.astype(do_blk.dtype), do_blk)
+            return dq_blk, (dk_blk, dv_blk)
+
+        dq0 = jnp.zeros_like(q_blk)
+        dq_blk, (dk_new, dv_new) = jax.lax.scan(
+            kv_step, dq0,
+            (jnp.arange(nk), jnp.moveaxis(k.reshape(b, nk, bk, kh, hd), 1, 0),
+             jnp.moveaxis(v.reshape(b, nk, bk, kh, hd_v), 1, 0),
+             jnp.moveaxis(dk_acc, 1, 0), jnp.moveaxis(dv_acc, 1, 0)))
+        return (jnp.moveaxis(dk_new, 0, 1), jnp.moveaxis(dv_new, 0, 1)), dq_blk
+
+    dk0 = jnp.zeros((b, nk, bk, kh, hd), q.dtype)
+    dv0 = jnp.zeros((b, nk, bk, kh, hd_v), q.dtype)
+    (dk, dv), dqs = jax.lax.scan(
+        q_step, (dk0, dv0),
+        (jnp.arange(nq), jnp.moveaxis(qg, 1, 0), jnp.moveaxis(dog, 1, 0),
+         jnp.moveaxis(lseg, 3, 0), jnp.moveaxis(delta, 3, 0)))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, h, hd)
+    dk = dk.reshape(b, sk, kh, hd)
+    dv = dv.reshape(b, sk, kh, hd_v)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            jnp.zeros((), jnp.float32))
+
+
+flash_attention_jnp.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ------------------------------------------------------------ decode attention
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     cur_len: jax.Array, window: int = 0) -> jax.Array:
+    """One-token attention against a (B, S_max, K, hd) cache.
+
+    cur_len: scalar or (B,) number of valid cache entries (new token included).
+    """
+    b, sq, h, hd = q.shape
+    _, smax, kh, _ = k_cache.shape
+    g = h // kh
+    qg = q.reshape(b, sq, kh, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
+    scores *= 1.0 / np.sqrt(hd)
+    pos = jnp.arange(smax)
+    cur = jnp.asarray(cur_len)                      # scalar
+    valid = pos < cur
+    if window > 0:
+        valid &= pos >= jnp.maximum(cur - window, 0)
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
+    return out.reshape(b, sq, h, hd)
+
+
+# ------------------------------------------------------------------ GQA block
+
+def gqa_qkv(params: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"])
+    if "b_q" in params:
+        q = q + params["b_q"]
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    return q, k, v
+
+
+def gqa_train(params: Params, x: jax.Array, cfg, positions: jax.Array,
+              use_rope: bool = True) -> jax.Array:
+    """Full-sequence causal attention (training / prefill compute)."""
+    q, k, v = gqa_qkv(params, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    seq = x.shape[1]
+    if seq > max(2 * cfg.attn_block_q, 2048):
+        out = blockwise_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    else:
+        out = full_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+
+
+def gqa_prefill(params: Params, x: jax.Array, cfg, positions: jax.Array,
+                use_rope: bool = True) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Prefill: same compute as train, also returns the KV cache."""
+    q, k, v = gqa_qkv(params, x, cfg)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    seq = x.shape[1]
+    if seq > max(2 * cfg.attn_block_q, 2048):
+        out = blockwise_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    else:
+        out = full_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    o = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+    return o, {"k": k, "v": v}
+
+
+def gqa_decode(params: Params, x: jax.Array, cfg, cache: Dict[str, jax.Array],
+               cur_len: jax.Array, use_rope: bool = True,
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode: append to cache at cur_len-? and attend.
+
+    x: (B, 1, D); cache arrays (B, S_max, K, hd); cur_len: scalar int32 —
+    number of tokens already in the cache (the new token goes at cur_len).
+    """
+    q, k, v = gqa_qkv(params, x, cfg)
+    pos = jnp.asarray(cur_len)[None]          # (1,) absolute position
+    if use_rope:
+        q = apply_rope(q, pos[None, :], cfg.rope_theta)
+        k = apply_rope(k, pos[None, :], cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                           (0, cur_len, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                           (0, cur_len, 0, 0))
+    out = decode_attention(q, k_cache, v_cache, cur_len=cur_len + 1,
+                           window=cfg.sliding_window)
+    o = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+    return o, {"k": k_cache, "v": v_cache}
+
+
+# -------------------------------------------------------------- cross attention
+
+def cross_attn_init(key, cfg) -> Params:
+    # encoder-decoder (whisper): kv over encoder states, MHA (kv heads = heads)
+    d = cfg.d_model
+    h, hd = cfg.num_heads, cfg.head_dim
+    keys = jax.random.split(key, 4)
+    from .layers import _dtype
+    dt = _dtype(cfg.param_dtype)
+    return {
+        "w_q": dense_init(keys[0], d, (h, hd), dt),
+        "w_k": dense_init(keys[1], d, (h, hd), dt),
+        "w_v": dense_init(keys[2], d, (h, hd), dt),
+        "w_o": dense_init(keys[3], h * hd, (d,), dt).reshape(h, hd, d),
+    }
+
+
+def cross_attention(params: Params, x: jax.Array, enc: jax.Array) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"])
+    k = jnp.einsum("bsd,dhk->bshk", enc, params["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, params["w_v"])
+    out = full_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+
+
+# ----------------------------------------------------------------------- MLA
+
+def mla_init(key, cfg) -> Params:
+    """DeepSeek-V2 multi-head latent attention."""
+    d = cfg.d_model
+    h = cfg.num_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    keys = jax.random.split(key, 7)
+    from .layers import _dtype
+    dt = _dtype(cfg.param_dtype)
+    return {
+        "w_dq": dense_init(keys[0], d, (rq,), dt),
+        "q_norm": rmsnorm_init(rq, dt),
+        "w_uq": dense_init(keys[1], rq, (h, dn + dr), dt),
+        "w_dkv": dense_init(keys[2], d, (rkv + dr,), dt),
+        "kv_norm": rmsnorm_init(rkv, dt),
+        "w_uk": dense_init(keys[3], rkv, (h, dn), dt),
+        "w_uv": dense_init(keys[4], rkv, (h, dv), dt),
+        "w_o": dense_init(keys[5], h * dv, (d,), dt).reshape(h, dv, d),
+    }
+
+
+def _mla_qkv_full(params: Params, x: jax.Array, cfg, positions: jax.Array):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    rkv = cfg.kv_lora_rank
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv = rmsnorm(params["kv_norm"], dkv[..., :rkv], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, rkv:], positions, cfg.rope_theta)  # (b,s,1,dr)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (*k_nope.shape[:-1], dr))], axis=-1)
+    return q_full, k_full, v, c_kv, k_rope
+
+
+def mla_train(params: Params, x: jax.Array, cfg, positions: jax.Array) -> jax.Array:
+    q, k, v, _, _ = _mla_qkv_full(params, x, cfg, positions)
+    seq = x.shape[1]
+    if seq > max(2 * cfg.attn_block_q, 2048):
+        out = blockwise_attention(q, k, v, causal=True,
+                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    else:
+        out = full_attention(q, k, v, causal=True)
+    return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+
+
+def mla_prefill(params: Params, x: jax.Array, cfg, positions: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    q, k, v, c_kv, k_rope = _mla_qkv_full(params, x, cfg, positions)
+    seq = x.shape[1]
+    if seq > max(2 * cfg.attn_block_q, 2048):
+        out = blockwise_attention(q, k, v, causal=True,
+                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    else:
+        out = full_attention(q, k, v, causal=True)
+    o = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+    return o, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+
+
+def mla_decode(params: Params, x: jax.Array, cfg, cache: Dict[str, jax.Array],
+               cur_len: jax.Array) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-matrix MLA decode: attend in the compressed latent space.
+
+    cache: c_kv (B, S_max, rkv), k_rope (B, S_max, dr).  The up-projections
+    W_UK / W_UV are absorbed into the query / output paths, so the per-step
+    cost is O(S·rkv) instead of O(S·H·hd) — deepseek-v2's key serving win.
+    """
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    rkv = cfg.kv_lora_rank
+    cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, params["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = jnp.asarray(cur_len)[None]
+    q_rope = apply_rope(q_rope, pos[None, :], cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_new = rmsnorm(params["kv_norm"], dkv[..., :rkv], cfg.norm_eps)
+    kr_new = apply_rope(dkv[..., None, rkv:], pos[None, :], cfg.rope_theta)[:, :, 0]
+
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_new.astype(cache["c_kv"].dtype),
+                                        (0, cur_len, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"],
+                                          kr_new.astype(cache["k_rope"].dtype),
+                                          (0, cur_len, 0))
+    # absorb W_UK: q_latent (b,1,h,rkv)
+    q_latent = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+    scores = (jnp.einsum("bshr,btr->bhst", q_latent, c_kv)
+              + jnp.einsum("bshk,btk->bhst", q_rope, k_rope)).astype(jnp.float32)
+    scores *= 1.0 / np.sqrt(dn + dr)
+    smax = c_kv.shape[1]
+    valid = jnp.arange(smax) < (cur_len + 1)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out_latent = jnp.einsum("bhst,btr->bshr", probs, c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", out_latent, params["w_uv"])
+    o = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
+    return o, {"c_kv": c_kv, "k_rope": k_rope}

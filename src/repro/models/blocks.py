@@ -1,0 +1,272 @@
+"""Per-family layer blocks: init + train/prefill/decode application.
+
+Every block is pre-norm residual.  Attention compute routes through
+``repro.dist.flash`` so the mesh strategy (head-parallel / context-parallel
+/ flash-decode lse-combine) is chosen in one place.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.flash import (causal_attention, decode_update_and_attend,
+                              mla_decode_attend)
+from repro.dist.sharding import current_ctx
+from .attention import (cross_attention, cross_attn_init, gqa_init, gqa_qkv,
+                        mla_init, _mla_qkv_full)
+from .layers import (Params, apply_rope, cast_params, gelu_mlp,
+                     gelu_mlp_init, layernorm, layernorm_init, mlp, mlp_init,
+                     rmsnorm, rmsnorm_init, _dtype)
+from .mamba import mamba_decode, mamba_init, mamba_prefill, mamba_train
+from .moe import moe_ffn, moe_init
+import numpy as np
+
+
+# ------------------------------------------------------------- GQA attention
+
+def _attn_apply(p: Params, x: jax.Array, cfg, positions: jax.Array,
+                want_cache: bool = False):
+    q, k, v = gqa_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    out = causal_attention(q, k, v, cfg=cfg, window=cfg.sliding_window)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    if want_cache:
+        # decode caches are HEAD-MAJOR (B, K, S, hd): the per-step decode
+        # dot then needs no transpose of the cache stripe (§Perf)
+        return o, {"k": jnp.transpose(k, (0, 2, 1, 3)),
+                   "v": jnp.transpose(v, (0, 2, 1, 3))}
+    return o
+
+
+def _attn_decode(p: Params, x: jax.Array, cfg, cache: Dict[str, jax.Array],
+                 cur_len: jax.Array):
+    q, k, v = gqa_qkv(p, x, cfg)
+    pos = jnp.asarray(cur_len)[None][None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    out, kc, vc = decode_update_and_attend(
+        q, k, v, cache["k"], cache["v"], cur_len, cfg=cfg,
+        window=cfg.sliding_window)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return o, {"k": kc, "v": vc}
+
+
+# -------------------------------------------------------------- MLA attention
+
+def _mla_apply(p: Params, x: jax.Array, cfg, positions: jax.Array,
+               want_cache: bool = False):
+    q, k, v, c_kv, k_rope = _mla_qkv_full(p, x, cfg, positions)
+    out = causal_attention(q, k, v, cfg=cfg)
+    o = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    if want_cache:
+        return o, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}
+    return o
+
+
+def _mla_decode(p: Params, x: jax.Array, cfg, cache: Dict[str, jax.Array],
+                cur_len: jax.Array):
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    rkv = cfg.kv_lora_rank
+    cq = rmsnorm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_dq"]),
+                 cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos = jnp.asarray(cur_len)[None][None, :]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    dkv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    c_new = rmsnorm(p["kv_norm"], dkv[..., :rkv], cfg.norm_eps)
+    kr_new = apply_rope(dkv[..., None, rkv:], pos, cfg.rope_theta)[:, :, 0]
+    q_latent = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    out_latent, c_kv, k_rope = mla_decode_attend(
+        q_latent, q_rope, c_new, kr_new, cache["c_kv"], cache["k_rope"],
+        cur_len, scale=1.0 / np.sqrt(dn + dr))
+    out = jnp.einsum("bshr,rhk->bshk", out_latent, p["w_uv"])
+    o = jnp.einsum("bshk,hkd->bsd", out, p["w_o"])
+    return o, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# --------------------------------------------------------------- decoder layer
+
+def decoder_layer_init(key, cfg, kind: str) -> Params:
+    """kind ∈ {dense, moe, mla_dense, mla_moe}."""
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg.param_dtype)
+    p: Params = {"ln1": rmsnorm_init(cfg.d_model, dt),
+                 "ln2": rmsnorm_init(cfg.d_model, dt)}
+    if kind.startswith("mla"):
+        p["attn"] = mla_init(k1, cfg)
+    else:
+        p["attn"] = gqa_init(k1, cfg)
+    if kind.endswith("moe"):
+        p["moe"] = moe_init(k2, cfg)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _sp(x):
+    return current_ctx().constrain(x, "dp", "sp", None)
+
+
+def decoder_layer_train(p: Params, x: jax.Array, cfg, positions: jax.Array,
+                        kind: str) -> Tuple[jax.Array, jax.Array]:
+    p = cast_params(p, cfg.dtype)
+    x = _sp(x)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    attn = _mla_apply(p["attn"], h, cfg, positions) if kind.startswith("mla") \
+        else _attn_apply(p["attn"], h, cfg, positions)
+    x = _sp(x + attn)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind.endswith("moe"):
+        f, aux = moe_ffn(p["moe"], h, cfg)
+    else:
+        f, aux = mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+    return _sp(x + f), aux
+
+
+def decoder_layer_prefill(p: Params, x: jax.Array, cfg, positions: jax.Array,
+                          kind: str) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    p = cast_params(p, cfg.dtype)
+    x = _sp(x)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind.startswith("mla"):
+        attn, cache = _mla_apply(p["attn"], h, cfg, positions, want_cache=True)
+    else:
+        attn, cache = _attn_apply(p["attn"], h, cfg, positions, want_cache=True)
+    x = _sp(x + attn)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind.endswith("moe"):
+        f, _ = moe_ffn(p["moe"], h, cfg)
+    else:
+        f = mlp(p["mlp"], h)
+    return _sp(x + f), cache
+
+
+def decoder_layer_decode(p: Params, x: jax.Array, cfg,
+                         cache: Dict[str, jax.Array], cur_len: jax.Array,
+                         kind: str) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    p = cast_params(p, cfg.dtype)
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind.startswith("mla"):
+        attn, cache = _mla_decode(p["attn"], h, cfg, cache, cur_len)
+    else:
+        attn, cache = _attn_decode(p["attn"], h, cfg, cache, cur_len)
+    x = x + attn
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if kind.endswith("moe"):
+        f, _ = moe_ffn(p["moe"], h, cfg)
+    else:
+        f = mlp(p["mlp"], h)
+    return x + f, cache
+
+
+# ----------------------------------------------------------------- mamba layer
+
+def mamba_layer_init(key, cfg) -> Params:
+    dt = _dtype(cfg.param_dtype)
+    return {"ln": rmsnorm_init(cfg.d_model, dt), "mixer": mamba_init(key, cfg)}
+
+
+def mamba_layer_train(p: Params, x: jax.Array, cfg) -> jax.Array:
+    p = cast_params(p, cfg.dtype)
+    x = _sp(x)
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    return _sp(x + mamba_train(p["mixer"], h, cfg))
+
+
+def mamba_layer_prefill(p: Params, x: jax.Array, cfg):
+    p = cast_params(p, cfg.dtype)
+    x = _sp(x)
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    y, cache = mamba_prefill(p["mixer"], h, cfg)
+    return _sp(x + y), cache
+
+
+def mamba_layer_decode(p: Params, x: jax.Array, cfg, cache):
+    p = cast_params(p, cfg.dtype)
+    h = rmsnorm(p["ln"], x, cfg.norm_eps)
+    y, cache = mamba_decode(p["mixer"], h, cfg, cache)
+    return x + y, cache
+
+
+# ------------------------------------------------------------- whisper blocks
+
+def enc_layer_init(key, cfg) -> Params:
+    k1, k2 = jax.random.split(key)
+    dt = _dtype(cfg.param_dtype)
+    return {"ln1": layernorm_init(cfg.d_model, dt),
+            "attn": cross_attn_init(k1, cfg),       # MHA weights (q,k,v,o)
+            "ln2": layernorm_init(cfg.d_model, dt),
+            "mlp": gelu_mlp_init(k2, cfg.d_model, cfg.d_ff, dt)}
+
+
+def enc_layer_apply(p: Params, x: jax.Array, cfg) -> jax.Array:
+    p = cast_params(p, cfg.dtype)
+    h = layernorm(p["ln1"], x, cfg.norm_eps)
+    # bidirectional self-attention (reuse cross_attention with enc=h)
+    attn = cross_attention(p["attn"], h, h)
+    x = x + attn
+    h = layernorm(p["ln2"], x, cfg.norm_eps)
+    return x + gelu_mlp(p["mlp"], h)
+
+
+def dec_layer_init(key, cfg) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = _dtype(cfg.param_dtype)
+    return {"ln1": layernorm_init(cfg.d_model, dt),
+            "attn": gqa_init(k1, cfg),
+            "ln_x": layernorm_init(cfg.d_model, dt),
+            "cross": cross_attn_init(k2, cfg),
+            "ln2": layernorm_init(cfg.d_model, dt),
+            "mlp": gelu_mlp_init(k3, cfg.d_model, cfg.d_ff, dt)}
+
+
+def dec_layer_train(p: Params, x: jax.Array, enc: jax.Array, cfg,
+                    positions: jax.Array) -> jax.Array:
+    p = cast_params(p, cfg.dtype)
+    h = layernorm(p["ln1"], x, cfg.norm_eps)
+    x = x + _attn_apply(p["attn"], h, cfg, positions)
+    h = layernorm(p["ln_x"], x, cfg.norm_eps)
+    x = x + cross_attention(p["cross"], h, enc)
+    h = layernorm(p["ln2"], x, cfg.norm_eps)
+    return x + gelu_mlp(p["mlp"], h)
+
+
+def dec_layer_prefill(p: Params, x: jax.Array, enc: jax.Array, cfg,
+                      positions: jax.Array):
+    p = cast_params(p, cfg.dtype)
+    h = layernorm(p["ln1"], x, cfg.norm_eps)
+    attn, cache = _attn_apply(p["attn"], h, cfg, positions, want_cache=True)
+    x = x + attn
+    h = layernorm(p["ln_x"], x, cfg.norm_eps)
+    # cache cross-attention K/V once
+    ck = jnp.einsum("bsd,dhk->bshk", enc, p["cross"]["w_k"])
+    cv = jnp.einsum("bsd,dhk->bshk", enc, p["cross"]["w_v"])
+    q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["w_q"])
+    from .attention import full_attention
+    xo = full_attention(q, ck, cv, causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", xo, p["cross"]["w_o"])
+    h = layernorm(p["ln2"], x, cfg.norm_eps)
+    x = x + gelu_mlp(p["mlp"], h)
+    return x, {**cache, "cross_k": ck, "cross_v": cv}
+
+
+def dec_layer_decode(p: Params, x: jax.Array, cfg, cache, cur_len):
+    p = cast_params(p, cfg.dtype)
+    h = layernorm(p["ln1"], x, cfg.norm_eps)
+    attn, new_cache = _attn_decode(p["attn"],
+                                   h, cfg, {"k": cache["k"], "v": cache["v"]},
+                                   cur_len)
+    x = x + attn
+    h = layernorm(p["ln_x"], x, cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["w_q"])
+    from .attention import full_attention
+    xo = full_attention(q, cache["cross_k"], cache["cross_v"], causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", xo, p["cross"]["w_o"])
+    h = layernorm(p["ln2"], x, cfg.norm_eps)
+    x = x + gelu_mlp(p["mlp"], h)
+    return x, {**new_cache, "cross_k": cache["cross_k"],
+               "cross_v": cache["cross_v"]}

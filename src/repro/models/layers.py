@@ -1,0 +1,151 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embeddings.
+
+Pure-functional JAX: every layer is ``init(key, cfg) -> params`` plus an
+``apply(params, x, ...)`` function.  Parameters are plain dict pytrees so
+sharding rules can be expressed by key-path (see ``repro.dist.sharding``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# Leaves kept in fp32 regardless of compute dtype (numerics-sensitive).
+_FP32_LEAVES = {"A_log", "dt_bias", "D", "router"}
+
+
+def cast_params(params: Params, dtype_name: str) -> Params:
+    """Cast fp32 master weights to the compute dtype at point of use.
+
+    Called *inside* scan bodies so the low-precision copy never
+    materializes for the whole stack at once.  The cast output is
+    constrained to the master's sharding so the FSDP all-gather moves
+    bf16, not fp32 (halves weight-gather traffic — §Perf).
+    """
+    dt = _dtype(dtype_name)
+
+    from repro.dist.sharding import _resolve_with_priority, current_ctx
+    ctx = current_ctx()
+
+    def cast(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in _FP32_LEAVES or leaf.dtype != jnp.float32:
+            return leaf
+        out = leaf.astype(dt)
+        if ctx.active:
+            keys = tuple(p.key if hasattr(p, "key") else str(p)
+                         for p in path)
+            spec = _resolve_with_priority(keys, tuple(leaf.shape), ctx)
+            out = jax.lax.with_sharding_constraint(
+                out, jax.sharding.NamedSharding(ctx.mesh, spec))
+        return out
+
+    return jax.tree_util.tree_map_with_path(cast, params)
+
+
+# ----------------------------------------------------------------- initializers
+
+def dense_init(key, in_dim: int, out_shape: Tuple[int, ...], dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, *out_shape), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(dim)        # keeps tied-unembedding logits O(1)
+    return (jax.random.normal(key, (vocab, dim), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+
+def rmsnorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim: int, dtype) -> Params:
+    return {"scale": jnp.ones((dim,), dtype=dtype),
+            "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------------ RoPE
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs   # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- MLP
+
+def mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d_model, (d_ff,), dtype),
+        "w_up": dense_init(k2, d_model, (d_ff,), dtype),
+        "w_down": dense_init(k3, d_ff, (d_model,), dtype),
+    }
+
+
+def mlp(params: Params, x: jax.Array) -> jax.Array:
+    """SwiGLU MLP (llama/qwen/mistral family)."""
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_in": dense_init(k1, d_model, (d_ff,), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype=dtype),
+        "w_out": dense_init(k2, d_ff, (d_model,), dtype),
+        "b_out": jnp.zeros((d_model,), dtype=dtype),
+    }
+
+
+def gelu_mlp(params: Params, x: jax.Array) -> jax.Array:
+    """GELU MLP (whisper)."""
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params["b_out"]

@@ -1,0 +1,511 @@
+"""Unified language model over all assigned architecture families.
+
+``LanguageModel(cfg)`` exposes:
+  init(key)                          -> params
+  train_loss(params, batch)         -> (loss, metrics)
+  prefill(params, batch)            -> (last_logits, cache)
+  decode_step(params, cache, token, cur_len) -> (logits, cache)
+  cache_spec(batch, seq)            -> ShapeDtypeStruct tree (for AOT decode)
+
+Layers are stacked (vmap-init) and iterated with ``lax.scan`` so compile
+time and HLO size are O(1) in depth; heterogeneous stacks (deepseek's
+leading dense layer, zamba2's shared-attention groups) scan homogeneous
+segments.  The sequence-chunked cross-entropy never materializes full
+(B, S, V) logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import current_ctx
+from . import blocks
+from .layers import Params, _dtype, embed_init, rmsnorm, rmsnorm_init
+
+
+def stack_init(key, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _remat(body, cfg):
+    if cfg.remat == "none":
+        return body
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def _sinusoid(seq: int, dim: int) -> np.ndarray:
+    pos = np.arange(seq)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * i / dim)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return out.astype(np.float32)
+
+
+@dataclasses.dataclass
+class LanguageModel:
+    cfg: Any
+
+    @property
+    def _dense_cfg(self):
+        # deepseek-v2: the leading dense layer uses the full intermediate
+        # size (12288) rather than the per-expert 1536
+        cfg = self.cfg
+        if cfg.use_mla and cfg.first_k_dense:
+            return dataclasses.replace(cfg, d_ff=12288 if cfg.d_model == 5120
+                                       else cfg.d_ff * 8)
+        return cfg
+
+    # ----------------------------------------------------------------- init
+
+    def init(self, key) -> Params:
+        cfg = self.cfg
+        dt = _dtype(cfg.param_dtype)
+        keys = jax.random.split(key, 8)
+        p: Params = {
+            "embedding": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": rmsnorm_init(cfg.d_model, dt),
+        }
+        if not cfg.tie_embeddings:
+            p["lm_head"] = (jax.random.normal(
+                keys[1], (cfg.d_model, cfg.vocab_size), jnp.float32)
+                / np.sqrt(cfg.d_model)).astype(dt)
+
+        fam = cfg.family
+        if fam in ("dense", "vlm"):
+            p["layers"] = stack_init(
+                keys[2], cfg.num_layers,
+                lambda k: blocks.decoder_layer_init(k, cfg, "dense"))
+        elif fam == "moe":
+            kind = "mla_moe" if cfg.use_mla else "moe"
+            dense_kind = "mla_dense" if cfg.use_mla else "dense"
+            n_moe = cfg.num_layers - cfg.first_k_dense
+            if cfg.first_k_dense:
+                dense_cfg = self._dense_cfg
+                p["dense_layers"] = stack_init(
+                    keys[3], cfg.first_k_dense,
+                    lambda k: blocks.decoder_layer_init(k, dense_cfg, dense_kind))
+            p["layers"] = stack_init(
+                keys[2], n_moe,
+                lambda k: blocks.decoder_layer_init(k, cfg, kind))
+        elif fam == "ssm":
+            p["layers"] = stack_init(
+                keys[2], cfg.num_layers,
+                lambda k: blocks.mamba_layer_init(k, cfg))
+        elif fam == "hybrid":
+            p["layers"] = stack_init(
+                keys[2], cfg.num_layers,
+                lambda k: blocks.mamba_layer_init(k, cfg))
+            p["shared_attn"] = blocks.decoder_layer_init(keys[3], cfg, "dense")
+        elif fam == "encdec":
+            p["enc_layers"] = stack_init(
+                keys[2], cfg.num_encoder_layers,
+                lambda k: blocks.enc_layer_init(k, cfg))
+            p["dec_layers"] = stack_init(
+                keys[3], cfg.num_layers,
+                lambda k: blocks.dec_layer_init(k, cfg))
+            from .layers import layernorm_init
+            p["final_norm"] = layernorm_init(cfg.d_model, dt)
+            p["enc_norm"] = layernorm_init(cfg.d_model, dt)
+        else:
+            raise ValueError(fam)
+        return p
+
+    # ------------------------------------------------------------ embedding
+
+    def _embed(self, params: Params, tokens: jax.Array,
+               extra: Optional[Dict[str, jax.Array]] = None) -> jax.Array:
+        cfg = self.cfg
+        ctx = current_ctx()
+        x = jnp.take(params["embedding"], tokens, axis=0).astype(_dtype(cfg.dtype))
+        if cfg.family == "vlm" and extra is not None and "patches" in extra:
+            x = jnp.concatenate(
+                [extra["patches"].astype(x.dtype), x], axis=1)
+        return ctx.constrain(x, "dp", None, None)
+
+    def _unembed_weight(self, params: Params) -> jax.Array:
+        if self.cfg.tie_embeddings:
+            return params["embedding"].T
+        return params["lm_head"]
+
+    # ----------------------------------------------------------- backbones
+
+    def _hybrid_segments(self):
+        cfg = self.cfg
+        g = cfg.num_layers // cfg.attn_every
+        rem = cfg.num_layers - g * cfg.attn_every
+        return g, rem
+
+    def _backbone_train(self, params: Params, x: jax.Array,
+                        extra: Optional[Dict[str, jax.Array]] = None
+                        ) -> Tuple[jax.Array, jax.Array]:
+        """Returns (hidden, aux_loss_sum)."""
+        cfg = self.cfg
+        positions = jnp.arange(x.shape[1])[None, :]
+        aux0 = jnp.zeros((), jnp.float32)
+        fam = cfg.family
+
+        if fam in ("dense", "vlm", "moe"):
+            if fam == "moe":
+                kind = "mla_moe" if cfg.use_mla else "moe"
+            else:
+                kind = "dense"
+
+            if "dense_layers" in params:
+                dkind = "mla_dense" if cfg.use_mla else "dense"
+                dcfg = self._dense_cfg
+
+                def dbody(carry, p_l):
+                    xx, aux = carry
+                    xx, a = blocks.decoder_layer_train(p_l, xx, dcfg,
+                                                       positions, dkind)
+                    return (xx, aux + a), None
+                (x, aux0), _ = jax.lax.scan(_remat(dbody, cfg), (x, aux0),
+                                            params["dense_layers"])
+
+            def body(carry, p_l):
+                xx, aux = carry
+                xx, a = blocks.decoder_layer_train(p_l, xx, cfg, positions, kind)
+                return (xx, aux + a), None
+            (x, aux), _ = jax.lax.scan(_remat(body, cfg), (x, aux0),
+                                       params["layers"])
+            return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
+
+        if fam == "ssm":
+            def body(xx, p_l):
+                return blocks.mamba_layer_train(p_l, xx, cfg), None
+            x, _ = jax.lax.scan(_remat(body, cfg), x, params["layers"])
+            return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux0
+
+        if fam == "hybrid":
+            g, rem = self._hybrid_segments()
+            per = cfg.attn_every
+            grouped = jax.tree_util.tree_map(
+                lambda a: a[: g * per].reshape(g, per, *a.shape[1:]),
+                params["layers"])
+            remainder = jax.tree_util.tree_map(
+                lambda a: a[g * per:], params["layers"])
+            shared = params["shared_attn"]
+
+            def mamba_body(xx, p_l):
+                return blocks.mamba_layer_train(p_l, xx, cfg), None
+
+            def group_body(xx, p_g):
+                xx, _ = blocks.decoder_layer_train(shared, xx, cfg,
+                                                   positions, "dense")
+                xx, _ = jax.lax.scan(_remat(mamba_body, cfg), xx, p_g)
+                return xx, None
+
+            x, _ = jax.lax.scan(group_body, x, grouped)
+            if rem:
+                x, _ = jax.lax.scan(_remat(mamba_body, cfg), x, remainder)
+            return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux0
+
+        if fam == "encdec":
+            from .layers import layernorm
+            frames = extra["frames"].astype(x.dtype)
+            enc_pos = jnp.asarray(
+                _sinusoid(frames.shape[1], cfg.d_model))[None].astype(x.dtype)
+            e = frames + enc_pos
+
+            def ebody(xx, p_l):
+                return blocks.enc_layer_apply(p_l, xx, cfg), None
+            e, _ = jax.lax.scan(_remat(ebody, cfg), e, params["enc_layers"])
+            e = layernorm(params["enc_norm"], e, cfg.norm_eps)
+
+            def dbody(xx, p_l):
+                return blocks.dec_layer_train(p_l, xx, e, cfg, positions), None
+            x, _ = jax.lax.scan(_remat(dbody, cfg), x, params["dec_layers"])
+            return layernorm(params["final_norm"], x, cfg.norm_eps), aux0
+
+        raise ValueError(fam)
+
+    # ----------------------------------------------------------------- loss
+
+    def lm_loss(self, params: Params, h: jax.Array, targets: jax.Array
+                ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Sequence-chunked vocab-parallel cross entropy."""
+        cfg = self.cfg
+        ctx = current_ctx()
+        b, s, d = h.shape
+        w = self._unembed_weight(params).astype(h.dtype)
+        chunk = min(cfg.loss_chunk, s)
+        while s % chunk:
+            chunk //= 2
+        nc = s // chunk
+        h_c = jnp.moveaxis(h.reshape(b, nc, chunk, d), 1, 0)
+        t_c = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+
+        def chunk_fn(carry, inp):
+            loss_sum, z_sum, correct, count = carry
+            h_i, t_i = inp
+            logits = jnp.einsum("bsd,dv->bsv", h_i, w).astype(jnp.float32)
+            logits = ctx.constrain(logits, "dp", None, "vocab")
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            safe_t = jnp.maximum(t_i, 0)
+            ll = jnp.take_along_axis(logits, safe_t[..., None], axis=-1)[..., 0]
+            mask = (t_i >= 0).astype(jnp.float32)
+            loss_sum = loss_sum + jnp.sum((lse - ll) * mask)
+            z_sum = z_sum + jnp.sum(jnp.square(lse) * mask)
+            pred = jnp.argmax(logits, axis=-1)
+            correct = correct + jnp.sum((pred == safe_t) * mask)
+            count = count + jnp.sum(mask)
+            return (loss_sum, z_sum, correct, count), None
+
+        init = (jnp.zeros((), jnp.float32),) * 4
+        (loss_sum, z_sum, correct, count), _ = jax.lax.scan(
+            _remat(chunk_fn, cfg), init, (h_c, t_c))
+        count = jnp.maximum(count, 1.0)
+        loss = loss_sum / count
+        metrics = {"ce_loss": loss, "z_loss": z_sum / count,
+                   "accuracy": correct / count, "tokens": count}
+        return loss, metrics
+
+    def train_loss(self, params: Params, batch: Dict[str, jax.Array]
+                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"], batch)
+        h, aux = self._backbone_train(params, x, batch)
+        targets = batch["targets"]
+        if cfg.family == "vlm" and "patches" in batch:
+            # patch positions carry no next-token loss
+            pad = jnp.full((targets.shape[0], batch["patches"].shape[1]),
+                           -1, dtype=targets.dtype)
+            targets = jnp.concatenate([pad, targets], axis=1)
+        loss, metrics = self.lm_loss(params, h, targets)
+        total = loss + 0.01 * aux + 1e-4 * metrics["z_loss"]
+        metrics["aux_loss"] = aux
+        metrics["loss"] = total
+        return total, metrics
+
+    # --------------------------------------------------------------- prefill
+
+    def prefill(self, params: Params, batch: Dict[str, jax.Array]
+                ) -> Tuple[jax.Array, Any]:
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"], batch)
+        positions = jnp.arange(x.shape[1])[None, :]
+        fam = cfg.family
+        cache: Dict[str, Any] = {}
+
+        if fam in ("dense", "vlm", "moe"):
+            kind = ("mla_moe" if cfg.use_mla else "moe") if fam == "moe" else "dense"
+            if "dense_layers" in params:
+                dkind = "mla_dense" if cfg.use_mla else "dense"
+                dcfg = self._dense_cfg
+
+                def dbody(xx, p_l):
+                    return blocks.decoder_layer_prefill(p_l, xx, dcfg,
+                                                        positions, dkind)
+                x, cache["dense"] = jax.lax.scan(dbody, x,
+                                                 params["dense_layers"])
+
+            def body(xx, p_l):
+                return blocks.decoder_layer_prefill(p_l, xx, cfg, positions, kind)
+            x, cache["layers"] = jax.lax.scan(body, x, params["layers"])
+            h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+        elif fam == "ssm":
+            def body(xx, p_l):
+                return blocks.mamba_layer_prefill(p_l, xx, cfg)
+            x, cache["layers"] = jax.lax.scan(body, x, params["layers"])
+            h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+        elif fam == "hybrid":
+            g, rem = self._hybrid_segments()
+            per = cfg.attn_every
+            grouped = jax.tree_util.tree_map(
+                lambda a: a[: g * per].reshape(g, per, *a.shape[1:]),
+                params["layers"])
+            remainder = jax.tree_util.tree_map(
+                lambda a: a[g * per:], params["layers"])
+            shared = params["shared_attn"]
+
+            def mamba_body(xx, p_l):
+                return blocks.mamba_layer_prefill(p_l, xx, cfg)
+
+            def group_body(xx, p_g):
+                xx, attn_c = blocks.decoder_layer_prefill(
+                    shared, xx, cfg, positions, "dense")
+                xx, mamba_c = jax.lax.scan(mamba_body, xx, p_g)
+                return xx, {"attn": attn_c, "mamba": mamba_c}
+
+            x, gcache = jax.lax.scan(group_body, x, grouped)
+            cache["groups"] = gcache
+            if rem:
+                x, cache["remainder"] = jax.lax.scan(mamba_body, x, remainder)
+            h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+        elif fam == "encdec":
+            from .layers import layernorm
+            frames = batch["frames"].astype(x.dtype)
+            enc_pos = jnp.asarray(
+                _sinusoid(frames.shape[1], cfg.d_model))[None].astype(x.dtype)
+            e = frames + enc_pos
+
+            def ebody(xx, p_l):
+                return blocks.enc_layer_apply(p_l, xx, cfg), None
+            e, _ = jax.lax.scan(ebody, e, params["enc_layers"])
+            e = layernorm(params["enc_norm"], e, cfg.norm_eps)
+
+            def dbody(xx, p_l):
+                return blocks.dec_layer_prefill(p_l, xx, e, cfg, positions)
+            x, cache["layers"] = jax.lax.scan(dbody, x, params["dec_layers"])
+            h = layernorm(params["final_norm"], x, cfg.norm_eps)
+        else:
+            raise ValueError(fam)
+
+        logits = jnp.einsum("bd,dv->bv", h[:, -1],
+                            self._unembed_weight(params).astype(h.dtype))
+        return logits.astype(jnp.float32), cache
+
+    # ---------------------------------------------------------------- decode
+
+    def decode_step(self, params: Params, cache: Any, token: jax.Array,
+                    cur_len: jax.Array) -> Tuple[jax.Array, Any]:
+        """token: (B, 1) int32; cur_len: scalar int32 tokens already cached."""
+        cfg = self.cfg
+        x = jnp.take(params["embedding"], token, axis=0).astype(_dtype(cfg.dtype))
+        fam = cfg.family
+        new_cache: Dict[str, Any] = {}
+
+        if fam in ("dense", "vlm", "moe"):
+            kind = ("mla_moe" if cfg.use_mla else "moe") if fam == "moe" else "dense"
+            if "dense_layers" in params:
+                dkind = "mla_dense" if cfg.use_mla else "dense"
+                dcfg = self._dense_cfg
+
+                def dbody(xx, inp):
+                    p_l, c_l = inp
+                    return blocks.decoder_layer_decode(p_l, xx, dcfg, c_l,
+                                                       cur_len, dkind)
+                x, new_cache["dense"] = jax.lax.scan(
+                    dbody, x, (params["dense_layers"], cache["dense"]))
+
+            def body(xx, inp):
+                p_l, c_l = inp
+                return blocks.decoder_layer_decode(p_l, xx, cfg, c_l,
+                                                   cur_len, kind)
+            x, new_cache["layers"] = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+            h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+        elif fam == "ssm":
+            def body(xx, inp):
+                p_l, c_l = inp
+                return blocks.mamba_layer_decode(p_l, xx, cfg, c_l)
+            x, new_cache["layers"] = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+            h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+        elif fam == "hybrid":
+            g, rem = self._hybrid_segments()
+            per = cfg.attn_every
+            grouped = jax.tree_util.tree_map(
+                lambda a: a[: g * per].reshape(g, per, *a.shape[1:]),
+                params["layers"])
+            remainder = jax.tree_util.tree_map(
+                lambda a: a[g * per:], params["layers"])
+            shared = params["shared_attn"]
+
+            def mamba_body(xx, inp):
+                p_l, c_l = inp
+                return blocks.mamba_layer_decode(p_l, xx, cfg, c_l)
+
+            def group_body(xx, inp):
+                p_g, c_g = inp
+                xx, attn_c = blocks.decoder_layer_decode(
+                    shared, xx, cfg, c_g["attn"], cur_len, "dense")
+                xx, mamba_c = jax.lax.scan(mamba_body, xx, (p_g, c_g["mamba"]))
+                return xx, {"attn": attn_c, "mamba": mamba_c}
+
+            x, new_cache["groups"] = jax.lax.scan(
+                group_body, x, (grouped, cache["groups"]))
+            if rem:
+                x, new_cache["remainder"] = jax.lax.scan(
+                    mamba_body, x, (remainder, cache["remainder"]))
+            h = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+
+        elif fam == "encdec":
+            from .layers import layernorm
+
+            def body(xx, inp):
+                p_l, c_l = inp
+                return blocks.dec_layer_decode(p_l, xx, cfg, c_l, cur_len)
+            x, new_cache["layers"] = jax.lax.scan(
+                body, x, (params["dec_layers"], cache["layers"]))
+            h = layernorm(params["final_norm"], x, cfg.norm_eps)
+        else:
+            raise ValueError(fam)
+
+        logits = jnp.einsum("bd,dv->bv", h[:, -1],
+                            self._unembed_weight(params).astype(h.dtype))
+        return logits.astype(jnp.float32), new_cache
+
+    # ------------------------------------------------------------ cache spec
+
+    def cache_spec(self, batch: int, seq: int) -> Any:
+        """ShapeDtypeStruct tree for an AOT decode step (no allocation)."""
+        cfg = self.cfg
+        bf = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        f32 = jnp.float32
+        S = jax.ShapeDtypeStruct
+        fam = cfg.family
+        kh, hd = cfg.num_kv_heads, cfg.head_dim
+
+        def kv(n_layers):
+            # head-major decode caches (B, K, S, hd) — see dist/flash.py
+            return {"k": S((n_layers, batch, kh, seq, hd), bf),
+                    "v": S((n_layers, batch, kh, seq, hd), bf)}
+
+        def mla(n_layers):
+            return {"c_kv": S((n_layers, batch, seq, cfg.kv_lora_rank), bf),
+                    "k_rope": S((n_layers, batch, seq, cfg.qk_rope_head_dim), bf)}
+
+        def mamba(n_layers):
+            ck = cfg.conv_kernel - 1
+            return {"conv_x": S((n_layers, batch, ck, cfg.d_inner), bf),
+                    "conv_B": S((n_layers, batch, ck, cfg.ssm_state), bf),
+                    "conv_C": S((n_layers, batch, ck, cfg.ssm_state), bf),
+                    "state": S((n_layers, batch, cfg.ssm_heads,
+                                cfg.ssm_head_dim, cfg.ssm_state), f32)}
+
+        if fam in ("dense", "vlm"):
+            return {"layers": kv(cfg.num_layers)}
+        if fam == "moe":
+            inner = mla if cfg.use_mla else kv
+            out = {"layers": inner(cfg.num_layers - cfg.first_k_dense)}
+            if cfg.first_k_dense:
+                out["dense"] = inner(cfg.first_k_dense)
+            return out
+        if fam == "ssm":
+            return {"layers": mamba(cfg.num_layers)}
+        if fam == "hybrid":
+            g, rem = self._hybrid_segments()
+            per = cfg.attn_every
+            groups = {
+                "attn": {"k": S((g, batch, kh, seq, hd), bf),
+                         "v": S((g, batch, kh, seq, hd), bf)},
+                "mamba": jax.tree_util.tree_map(
+                    lambda s: S((g, per, *s.shape[1:]), s.dtype), mamba(1)),
+            }
+            out = {"groups": groups}
+            if rem:
+                out["remainder"] = mamba(rem)
+            return out
+        if fam == "encdec":
+            enc = cfg.encoder_seq
+            h = cfg.num_heads
+            return {"layers": {
+                "k": S((cfg.num_layers, batch, h, seq, hd), bf),
+                "v": S((cfg.num_layers, batch, h, seq, hd), bf),
+                "cross_k": S((cfg.num_layers, batch, enc, h, hd), bf),
+                "cross_v": S((cfg.num_layers, batch, enc, h, hd), bf)}}
+        raise ValueError(fam)

@@ -1,0 +1,2 @@
+from .adamw import (OptimizerConfig, adamw_update, init_opt_state, lr_at,
+                    global_norm)

@@ -1,0 +1,178 @@
+"""AdamW with optional int8-quantized moment states.
+
+For ≥100B-parameter MoE configs (arctic-480b, deepseek-v2-236b) the fp32
+Adam moments don't fit 16 GB/chip HBM alongside fp32 master weights, so
+``state_dtype="int8"`` stores both moments in 8 bits with per-row scales:
+
+* ``m`` — signed linear quantization (row max-abs / 127);
+* ``v`` — non-negative, huge dynamic range → quartic-root companding:
+  ``q = round(255 · (v / vmax)^(1/4))`` so small entries keep relative
+  resolution (linear quant would zero them and blow up the update).
+
+This is a distributed-optimization memory trick in the spirit of 8-bit
+Adam; tests assert a small model still descends with int8 states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"      # float32 | int8
+    accum_steps: int = 1
+    accum_dtype: str = "float32"      # bfloat16 halves the grad accumulator
+
+
+def lr_at(oc: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = oc.peak_lr * step / max(oc.warmup_steps, 1)
+    prog = jnp.clip((step - oc.warmup_steps)
+                    / max(oc.total_steps - oc.warmup_steps, 1), 0.0, 1.0)
+    cos = oc.min_lr_frac + (1 - oc.min_lr_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+    return jnp.where(step < oc.warmup_steps, warm, oc.peak_lr * cos)
+
+
+# ----------------------------------------------------------- int8 compansion
+
+def _quant_m(m: jax.Array) -> Dict[str, jax.Array]:
+    scale = jnp.max(jnp.abs(m), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(m / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequant_m(s: Dict[str, jax.Array]) -> jax.Array:
+    return s["q"].astype(jnp.float32) * s["scale"]
+
+
+def _quant_v(v: jax.Array) -> Dict[str, jax.Array]:
+    vmax = jnp.max(v, axis=-1, keepdims=True)
+    vmax = jnp.maximum(vmax, 1e-30)
+    q = jnp.round(255.0 * jnp.sqrt(jnp.sqrt(v / vmax)))
+    return {"q": jnp.clip(q, 0, 255).astype(jnp.uint8),
+            "scale": vmax.astype(jnp.float32)}
+
+
+def _dequant_v(s: Dict[str, jax.Array]) -> jax.Array:
+    r = s["q"].astype(jnp.float32) / 255.0
+    return jnp.square(jnp.square(r)) * s["scale"]
+
+
+def _zeros_like_state(p: jax.Array, quant: bool, signed: bool):
+    if not quant:
+        return jnp.zeros(p.shape, jnp.float32)
+    scale_shape = p.shape[:-1] + (1,) if p.ndim else (1,)
+    return {"q": jnp.zeros(p.shape, jnp.int8 if signed else jnp.uint8),
+            "scale": jnp.zeros(scale_shape, jnp.float32)}
+
+
+def init_opt_state(params: Any, oc: OptimizerConfig) -> Dict[str, Any]:
+    quant = oc.state_dtype == "int8"
+    m = jax.tree_util.tree_map(lambda p: _zeros_like_state(p, quant, True), params)
+    v = jax.tree_util.tree_map(lambda p: _zeros_like_state(p, quant, False), params)
+    return {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+_NO_DECAY = {"scale", "bias", "A_log", "dt_bias", "D", "b_q", "b_k", "b_v",
+             "b_in", "b_out", "conv_b_x", "conv_b_B", "conv_b_C"}
+
+# Stacked leaves above this size update layer-by-layer (in-place scan) so
+# fp32 dequant temporaries stay one-layer-sized; tests may lower it.
+CHUNK_BYTES = 128 * 1024 * 1024
+
+
+def adamw_update(oc: OptimizerConfig, grads: Any, params: Any,
+                 opt_state: Dict[str, Any]
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    """One AdamW step.  Returns (new_params, new_opt_state, metrics)."""
+    quant = oc.state_dtype == "int8"
+    step = opt_state["step"] + 1
+    lr = lr_at(oc, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gnorm, 1e-12))
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - oc.b1 ** t
+    bc2 = 1.0 - oc.b2 ** t
+
+    paths_p = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    flat_p = paths_p
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+
+    def leaf_update(p, g, m_s, v_s, decay: bool):
+        g = g.astype(jnp.float32) * clip
+        m = _dequant_m(m_s) if quant else m_s
+        v = _dequant_v(v_s) if quant else v_s
+        m = oc.b1 * m + (1 - oc.b1) * g
+        v = oc.b2 * v + (1 - oc.b2) * jnp.square(g)
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + oc.eps)
+        if decay:
+            upd = upd + oc.weight_decay * p.astype(jnp.float32)
+        p2 = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return p2, (_quant_m(m) if quant else m), (_quant_v(v) if quant else v)
+
+    def chunked_update(p, g, m_s, v_s, decay):
+        n = p.shape[0]
+
+        def body(carry, i):
+            p_b, m_b, v_b = carry
+            take = lambda a: jax.lax.dynamic_index_in_dim(a, i, 0,
+                                                          keepdims=False)
+            p_i = take(p_b)
+            m_i = jax.tree_util.tree_map(take, m_b)
+            v_i = jax.tree_util.tree_map(take, v_b)
+            p2, m2, v2 = leaf_update(p_i, take(g), m_i, v_i, decay)
+            put = lambda b, x: jax.lax.dynamic_update_index_in_dim(
+                b, x.astype(b.dtype), i, 0)
+            p_b = put(p_b, p2)
+            m_b = jax.tree_util.tree_map(put, m_b, m2)
+            v_b = jax.tree_util.tree_map(put, v_b, v2)
+            return (p_b, m_b, v_b), None
+
+        (p2, m2, v2), _ = jax.lax.scan(body, (p, m_s, v_s),
+                                       jnp.arange(n))
+        return p2, m2, v2
+
+    new_p, new_m, new_v = [], [], []
+    for (path, p), g, m_s, v_s in zip(flat_p, flat_g, flat_m, flat_v):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        decay = bool(oc.weight_decay) and name not in _NO_DECAY
+        # chunk ONLY over a genuine layer-stack dim (small leading extent,
+        # ndim>=3).  Chunking a 2-D leaf (embedding/lm_head) would scan
+        # over a model-sharded dim: measured 16.7 TB of per-row collectives.
+        if p.size * 4 > CHUNK_BYTES and p.ndim >= 3 and 1 < p.shape[0] <= 256:
+            p2, m2, v2 = chunked_update(p, g, m_s, v_s, decay)
+        else:
+            p2, m2, v2 = leaf_update(p, g, m_s, v_s, decay)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+
+    params2 = treedef.unflatten(new_p)
+    state2 = {"m": treedef.unflatten(new_m), "v": treedef.unflatten(new_v),
+              "step": step}
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return params2, state2, metrics

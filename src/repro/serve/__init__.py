@@ -1,0 +1,1 @@
+from .steps import make_prefill_step, make_decode_step

@@ -1,0 +1,22 @@
+"""Serving steps: prefill and single-token decode (the shapes the
+``decode_*`` / ``long_*`` dry-run cells lower)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LanguageModel
+
+
+def make_prefill_step(model: LanguageModel):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: LanguageModel):
+    def decode_step(params, cache, token, cur_len):
+        return model.decode_step(params, cache, token, cur_len)
+    return decode_step

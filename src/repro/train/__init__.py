@@ -1,0 +1,1 @@
+from .steps import TrainState, make_train_step, init_train_state

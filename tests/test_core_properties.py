@@ -1,0 +1,165 @@
+"""Hypothesis property tests over the core runtime's §3–§6 invariants.
+
+Interleavings are explored via seeded delivery jitter: the same program run
+under any message ordering must preserve the paper's guarantees
+(exactly-once creation, same-GUID resolution, partition safety,
+write-back correctness).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DbMode, EDT_PROP_MAPPED, NULL_GUID, OcrError,
+                        PartitionOverlapError, Runtime, UNINITIALIZED_GUID,
+                        spawn_main)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), nodes=st.integers(1, 6),
+       size=st.integers(1, 12), gets_per_index=st.integers(1, 4))
+def test_map_creator_exactly_once_under_any_interleaving(
+        seed, nodes, size, gets_per_index):
+    """§4: concurrent ocrMapGet storms create each object exactly once and
+    every LID for an index resolves to the same GUID."""
+    rt = Runtime(num_nodes=nodes, seed=seed, jitter=3.0)
+    resolved = {}
+
+    def creator(ctx, lid, index, paramv, guidv):
+        ctx.edt_create(guidv[0], paramv=[index], depv=[UNINITIALIZED_GUID],
+                       props=EDT_PROP_MAPPED)
+
+    def noop(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(noop, 1, 1)
+        m = api.map_create(size, creator, guidv=[tmpl])
+        lids = [(i, api.map_get(m, i))
+                for i in range(size) for _ in range(gets_per_index)]
+        for i, lid in lids:
+            resolved.setdefault(i, []).append(api.get_guid(lid))
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.creator_calls == size
+    for i, guids in resolved.items():
+        assert len(set(guids)) == 1, f"index {i} resolved to {set(guids)}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 200), st.integers(1, 80)),
+                min_size=1, max_size=12))
+def test_partition_no_overlap_invariant(parts):
+    """§6.2: the runtime accepts a partition request iff it is in-bounds and
+    disjoint from every live partition."""
+    rt = Runtime()
+    accepted = []
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(256)
+        for (off, size) in parts:
+            try:
+                api.db_partition(db, [(off, size)])
+                accepted.append((off, size))
+            except PartitionOverlapError:
+                pass
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    # model check: greedy replay must accept exactly the same set
+    model = []
+    for (off, size) in parts:
+        in_bounds = 0 <= off and size > 0 and off + size <= 256
+        disjoint = all(off >= o + s or o >= off + size for (o, s) in model)
+        if in_bounds and disjoint:
+            model.append((off, size))
+    assert accepted == model
+    # and accepted partitions are pairwise disjoint
+    for i, (o1, s1) in enumerate(accepted):
+        for (o2, s2) in accepted[i + 1:]:
+            assert o1 + s1 <= o2 or o2 + s2 <= o1
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       writes=st.lists(st.tuples(st.integers(0, 3), st.integers(1, 250)),
+                       min_size=1, max_size=4, unique_by=lambda t: t[0]))
+def test_chunk_writeback_under_interleaving(tmp_path_factory, seed, writes):
+    """§5: disjoint chunks written in EW mode land at their exact offsets
+    regardless of task interleaving."""
+    path = str(tmp_path_factory.mktemp("fio") / f"f_{seed}.bin")
+    chunk = 64
+    rt = Runtime(num_nodes=3, seed=seed, jitter=2.0)
+
+    def writer(paramv, depv, api):
+        val = paramv[0]
+        depv[0].ptr[:] = np.uint8(val)
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, _ = api.file_open(path, "wb+")
+        tmpl = api.edt_template_create(writer, 1, 1)
+        for slot, (idx, val) in enumerate(writes):
+            c = api.file_get_chunk(f, idx * chunk, chunk)
+            api.edt_create(tmpl, paramv=[val], depv=[c],
+                           dep_modes=[DbMode.EW], placement=slot % 3)
+        api.file_release(f)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    data = np.fromfile(path, dtype=np.uint8)
+    for (idx, val) in writes:
+        got = data[idx * chunk: (idx + 1) * chunk]
+        assert np.all(got == val), (idx, val, got[:4])
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), w=st.integers(1, 4), h=st.integers(1, 4))
+def test_wavefront_order_any_interleaving(seed, w, h):
+    from test_core_runtime import run_wavefront
+    executed, stats = run_wavefront(w, h, seed=seed, jitter=4.0, num_nodes=5)
+    assert len(executed) == w * h
+    pos = {c: i for i, c in enumerate(executed)}
+    for (x, y) in executed:
+        if x > 0:
+            assert pos[(x - 1, y)] < pos[(x, y)]
+        if y > 0:
+            assert pos[(x, y - 1)] < pos[(x, y)]
+    assert stats.creator_calls == w * h
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 8))
+def test_lid_chain_linearizable(seed, n):
+    """§3: a chain of LID-created tasks linked by deferred dependences runs
+    in chain order under any interleaving."""
+    rt = Runtime(num_nodes=4, seed=seed, jitter=5.0)
+    order = []
+
+    def w(paramv, depv, api):
+        order.append(paramv[0])
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        from repro.core import EDT_PROP_LID
+        tmpl = api.edt_template_create(w, 1, 1)
+        prev_ev = None
+        for i in range(n):
+            t, ev = api.edt_create(tmpl, paramv=[i],
+                                   depv=[UNINITIALIZED_GUID],
+                                   props=EDT_PROP_LID, output_event=True,
+                                   placement=i % 4)
+            if prev_ev is None:
+                api.add_dependence(NULL_GUID, t, 0, DbMode.NULL)
+            else:
+                api.add_dependence(prev_ev, t, 0, DbMode.NULL)
+            prev_ev = ev
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert order == list(range(n))

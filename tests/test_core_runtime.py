@@ -1,0 +1,401 @@
+"""Behavioural tests of the OCR-extensions core runtime against the paper's
+own examples (§3 LIDs, §4 labeled wavefront, §6 partitioning)."""
+import numpy as np
+import pytest
+
+from repro.core import (DB_COPY_PARTITION, DB_COPY_PARTITION_BACK,
+                        DB_PROP_NO_ACQUIRE, DbMode, EDT_PROP_LID,
+                        EDT_PROP_MAPPED, EventKind, NULL_GUID, IdType,
+                        OcrError, PartitionDeadlockError,
+                        PartitionOverlapError, PartitionStaticError, Runtime,
+                        UNINITIALIZED_GUID, id_type, spawn_main)
+
+
+def run_wavefront(w, h, seed=0, jitter=0.0, num_nodes=4):
+    rt = Runtime(num_nodes=num_nodes, seed=seed, jitter=jitter)
+    executed = []
+    state = {}
+
+    def creator(ctx, object_lid, index, paramv, guidv):
+        width, _ = paramv
+        x, y = index % width, index // width
+        deps = [NULL_GUID if x == 0 else UNINITIALIZED_GUID,
+                NULL_GUID if y == 0 else UNINITIALIZED_GUID]
+        ctx.edt_create(guidv[0], paramv=[x, y], depv=deps,
+                       props=EDT_PROP_MAPPED)
+
+    def work(paramv, depv, api):
+        x, y = paramv
+        executed.append((x, y))
+        if x == w - 1 and y == h - 1:
+            api.shutdown()
+            return NULL_GUID
+        if x < w - 1:
+            t = api.map_get(state["map"], (x + 1) + y * w)
+            api.add_dependence(NULL_GUID, t, 0, DbMode.NULL)
+        if y < h - 1:
+            t = api.map_get(state["map"], x + (y + 1) * w)
+            api.add_dependence(NULL_GUID, t, 1, DbMode.NULL)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(work, 2, 2)
+        state["map"] = api.map_create(w * h, creator, paramv=[w, h],
+                                      guidv=[tmpl])
+        api.map_get(state["map"], 0)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    return executed, stats
+
+
+def test_wavefront_executes_all_and_in_order():
+    executed, stats = run_wavefront(4, 3)
+    assert len(executed) == 12
+    pos = {c: i for i, c in enumerate(executed)}
+    for (x, y) in executed:
+        if x > 0:
+            assert pos[(x - 1, y)] < pos[(x, y)]
+        if y > 0:
+            assert pos[(x, y - 1)] < pos[(x, y)]
+    # §4 guarantee: creator ran exactly once per index despite racing gets
+    assert stats.creator_calls == 12
+
+
+def test_wavefront_duplicate_gets_same_guid():
+    rt = Runtime(num_nodes=3)
+    got = {}
+
+    def creator(ctx, lid, index, paramv, guidv):
+        ctx.edt_create(guidv[0], paramv=[index],
+                       depv=[UNINITIALIZED_GUID], props=EDT_PROP_MAPPED)
+
+    def noop(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(noop, 1, 1)
+        m = api.map_create(4, creator, guidv=[tmpl])
+        l1 = api.map_get(m, 2)
+        l2 = api.map_get(m, 2)
+        assert l1 != l2                       # distinct LIDs...
+        got["g1"] = api.get_guid(l1)
+        got["g2"] = api.get_guid(l2)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert got["g1"] == got["g2"]             # ...same resolved GUID (§4)
+
+
+def test_lid_vs_blocking_roundtrips():
+    def bench(use_lid, n=6):
+        rt = Runtime(num_nodes=4, net_latency=5.0)
+
+        def noop(paramv, depv, api):
+            return NULL_GUID
+
+        def main(paramv, depv, api):
+            tmpl = api.edt_template_create(noop, 0, 1)
+            for i in range(n):
+                t, _ = api.edt_create(
+                    tmpl, depv=[UNINITIALIZED_GUID],
+                    props=EDT_PROP_LID if use_lid else 0,
+                    placement=1 + (i % 3))
+                assert id_type(t) == (IdType.LID if use_lid else IdType.GUID)
+                api.add_dependence(NULL_GUID, t, 0, DbMode.NULL)
+            return NULL_GUID
+
+        spawn_main(rt, main)
+        return rt.run()
+
+    lid, blk = bench(True), bench(False)
+    assert lid.blocking_roundtrips == 0
+    assert blk.blocking_roundtrips == 6
+    assert lid.makespan < blk.makespan
+    assert lid.messages_deferred > 0          # deps waited for M_map (§3)
+    assert lid.deferred_patched == lid.messages_deferred
+
+
+def test_local_creation_returns_guid_even_if_lid_requested():
+    """§3: the runtime may return a real GUID when no communication is
+    needed — the application can detect this via ocrGetIdType."""
+    rt = Runtime(num_nodes=2)
+    seen = {}
+
+    def noop(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(noop, 0, 1)
+        t, _ = api.edt_create(tmpl, depv=[UNINITIALIZED_GUID],
+                              props=EDT_PROP_LID, placement=0)  # local node
+        seen["t"] = id_type(t)
+        api.add_dependence(NULL_GUID, t, 0, DbMode.NULL)
+        return NULL_GUID
+
+    spawn_main(rt, main, node=0)
+    rt.run()
+    assert seen["t"] == IdType.GUID
+
+
+def test_partition_parallelism_and_quiescence():
+    """§6: EW partitions run in parallel; the parent is quiescent until all
+    partitions are destroyed."""
+    rt = Runtime(num_nodes=1)
+    times = {}
+
+    def work(paramv, depv, api):
+        data = depv[0].ptr.view(np.uint32)
+        data += np.uint32(paramv[0])
+        times[paramv[0]] = api.rt.clock
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def finish(paramv, depv, api):
+        data = depv[0].ptr.view(np.uint32)
+        times["finish"] = api.rt.clock
+        times["sum"] = int(data.sum())
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, ptr = api.db_create(64)
+        ptr.view(np.uint32)[:] = 1
+        api.db_release(db)
+        parts = api.db_partition(db, [(0, 32), (32, 32)])
+        tmpl = api.edt_template_create(work, 1, 1)
+        ftmpl = api.edt_template_create(finish, 0, 1)
+        api.edt_create(tmpl, paramv=[10], depv=[parts[0]],
+                       dep_modes=[DbMode.EW], duration=5)
+        api.edt_create(tmpl, paramv=[20], depv=[parts[1]],
+                       dep_modes=[DbMode.EW], duration=5)
+        # finish acquires the parent: must wait for both partitions
+        api.edt_create(ftmpl, depv=[db], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert times["sum"] == 8 * 11 + 8 * 21
+    assert times["finish"] >= max(times[10], times[20]) + 5
+
+
+def test_partition_overlap_rejected():
+    rt = Runtime()
+    errs = []
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(100)
+        api.db_partition(db, [(0, 50)])
+        for bad in ([(40, 20)], [(0, 200)], [(-1, 10)]):
+            try:
+                api.db_partition(db, bad)
+            except PartitionOverlapError:
+                errs.append(bad[0])
+        try:
+            api.db_partition(db, [(50, 30), (60, 30)])
+        except PartitionOverlapError:
+            errs.append("mutual")
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert len(errs) == 4
+
+
+def test_static_partitioning():
+    from repro.core import OCR_DB_PARTITION_STATIC
+    rt = Runtime()
+    out = {}
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(100)
+        parts = api.db_partition(db, [(0, 50)], props=OCR_DB_PARTITION_STATIC)
+        try:
+            api.db_partition(db, [(50, 50)])
+            out["raised"] = False
+        except PartitionStaticError:
+            out["raised"] = True
+        api.db_destroy(parts[0])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert out["raised"]
+    # all partitions destroyed → static flag cleared, repartition allowed
+    def main2(paramv, depv, api):
+        out["ok"] = api.db_partition(out["db"], [(0, 10)]) is not None
+        return NULL_GUID
+    # (second runtime phase: reuse same runtime object)
+    d = rt.nodes[0].objects
+    out["db"] = next(g for g, o in d.items()
+                     if getattr(o, "size", None) == 100)
+    spawn_main(rt, main2)
+    rt.run()
+    assert out["ok"]
+
+
+def test_parent_child_same_task_deadlock():
+    rt = Runtime()
+    raised = []
+
+    def w(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(100)
+        api.db_release(db)
+        parts = api.db_partition(db, [(0, 50)])
+        tmpl = api.edt_template_create(w, 0, 2)
+        api.edt_create(tmpl, depv=[db, parts[0]],
+                       dep_modes=[DbMode.RO, DbMode.EW])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    with pytest.raises(PartitionDeadlockError):
+        rt.run()
+
+
+def test_db_copy_zero_copy_and_back():
+    """§6.3: NO_ACQUIRE + DB_COPY_PARTITION → zero-copy view; PARTITION_BACK
+    destroys the source and frees the parent."""
+    rt = Runtime()
+    out = {}
+
+    def main(paramv, depv, api):
+        block, ptr = api.db_create(256)
+        ptr[:] = 9
+        api.db_release(block)
+        c, _ = api.db_create(128, props=DB_PROP_NO_ACQUIRE)
+        ev = api.db_copy(c, 0, block, 64, 128, DB_COPY_PARTITION)
+        out["block"] = block
+        out["chunk"] = c
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert rt.stats.bytes_zero_copy == 128 and rt.stats.bytes_copied == 0
+    chunk = rt.lookup(out["chunk"])
+    assert chunk.is_view and chunk.parent == out["block"]
+    parent = rt.lookup(out["block"])
+    assert out["chunk"] in parent.partitions
+
+    def main2(paramv, depv, api):
+        api.db_copy(out["block"], 64, out["chunk"], 0, 128,
+                    DB_COPY_PARTITION_BACK)
+        return NULL_GUID
+
+    spawn_main(rt, main2)
+    rt.run()
+    assert rt.try_lookup(out["chunk"]) is None        # source destroyed
+    assert not rt.lookup(out["block"]).partitions     # parent free again
+
+
+def test_event_kinds():
+    rt = Runtime()
+    fired = []
+
+    def w(paramv, depv, api):
+        fired.append(paramv[0])
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(w, 1, 1)
+        sticky = api.event_create(EventKind.STICKY)
+        api.event_satisfy(sticky)
+        # dependence added AFTER satisfaction still fires (sticky)
+        t, _ = api.edt_create(tmpl, paramv=["sticky"],
+                              depv=[UNINITIALIZED_GUID])
+        api.add_dependence(sticky, t, 0, DbMode.NULL)
+        latch = api.event_create(EventKind.LATCH, latch_count=2)
+        t2, _ = api.edt_create(tmpl, paramv=["latch"],
+                               depv=[UNINITIALIZED_GUID])
+        api.add_dependence(latch, t2, 0, DbMode.NULL)
+        api.event_satisfy(latch)
+        api.event_satisfy(latch)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert sorted(fired) == ["latch", "sticky"]
+
+
+def test_recursive_partitioning():
+    """§6.2: partitions can themselves be partitioned; the deadlock rule
+    applies across levels (grandparent + grandchild in one task)."""
+    rt = Runtime()
+    out = {}
+
+    def leaf_task(paramv, depv, api):
+        depv[0].ptr.view(np.uint32)[:] = np.uint32(paramv[0])
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def check(paramv, depv, api):
+        out["data"] = depv[0].ptr.view(np.uint32).copy()
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, ptr = api.db_create(64)
+        ptr.view(np.uint32)[:] = 0
+        api.db_release(db)
+        top = api.db_partition(db, [(0, 32), (32, 32)])
+        sub = api.db_partition(top[0], [(0, 16), (16, 16)])   # recursive
+        tmpl = api.edt_template_create(leaf_task, 1, 1)
+        api.edt_create(tmpl, paramv=[5], depv=[sub[0]], dep_modes=[DbMode.EW])
+        api.edt_create(tmpl, paramv=[6], depv=[sub[1]], dep_modes=[DbMode.EW])
+        api.edt_create(tmpl, paramv=[7], depv=[top[1]], dep_modes=[DbMode.EW])
+        out["db"] = db
+        out["top0"] = top[0]
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+
+    # grandparent+grandchild in one task → deadlock error
+    def main2(paramv, depv, api):
+        sub2 = api.db_partition(out["top0"], [(0, 16)])
+        tmpl = api.edt_template_create(lambda p, d, a: NULL_GUID, 0, 2)
+        api.edt_create(tmpl, depv=[out["db"], sub2[0]],
+                       dep_modes=[DbMode.RO, DbMode.EW])
+        return NULL_GUID
+
+    spawn_main(rt, main2)
+    with pytest.raises(PartitionDeadlockError):
+        rt.run()
+
+
+def test_recursive_partition_values_propagate_to_parent():
+    """Writes through grandchild views are visible through the parent once
+    the whole tree is destroyed (zero-copy views, §6.3 semantics)."""
+    rt = Runtime()
+    out = {}
+
+    def w(paramv, depv, api):
+        depv[0].ptr.view(np.uint32)[:] = np.uint32(paramv[0])
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def check(paramv, depv, api):
+        out["data"] = depv[0].ptr.view(np.uint32).copy()
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, ptr = api.db_create(32)
+        ptr.view(np.uint32)[:] = 0
+        api.db_release(db)
+        top = api.db_partition(db, [(0, 16), (16, 16)])
+        sub = api.db_partition(top[0], [(0, 8), (8, 8)])
+        tmpl = api.edt_template_create(w, 1, 1)
+        api.edt_create(tmpl, paramv=[1], depv=[sub[0]], dep_modes=[DbMode.EW])
+        api.edt_create(tmpl, paramv=[2], depv=[sub[1]], dep_modes=[DbMode.EW])
+        api.edt_create(tmpl, paramv=[3], depv=[top[1]], dep_modes=[DbMode.EW])
+        # intermediate partition must also be destroyed to free the parent
+        api.db_destroy(top[0])
+        ctmpl = api.edt_template_create(check, 0, 1)
+        api.edt_create(ctmpl, depv=[db], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert list(out["data"]) == [1, 1, 2, 2, 3, 3, 3, 3]

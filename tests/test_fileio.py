@@ -1,0 +1,146 @@
+"""§5 file IO: descriptors, chunks, write-back rules, enlargement."""
+import numpy as np
+import pytest
+
+from repro.core import (ChunkOverlapError, DbMode, FileModeError, NULL_GUID,
+                        Runtime, spawn_main)
+
+
+def test_descriptor_delays_task(tmp_path):
+    """A task depending on the descriptor runs only after the async open."""
+    path = str(tmp_path / "f.bin")
+    np.arange(16, dtype=np.uint32).tofile(path)
+    rt = Runtime(io_latency=7.0)
+    seen = {}
+
+    def reader(paramv, depv, api):
+        seen["t"] = api.rt.clock
+        seen["size"] = api.file_get_size(depv[0].ptr)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb")
+        tmpl = api.edt_template_create(reader, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert seen["size"] == 64
+    assert seen["t"] >= 7.0            # waited for the open
+
+
+def test_ro_chunk_not_written_back(tmp_path):
+    path = str(tmp_path / "f.bin")
+    np.full(64, 5, np.uint8).tofile(path)
+    rt = Runtime()
+
+    def toucher(paramv, depv, api):
+        # RO pointer is read-only; destroying must NOT write back
+        assert not depv[0].ptr.flags.writeable
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            c = api2.file_get_chunk(fg, 0, 64)
+            api2.file_release(fg)
+            tmpl2 = api2.edt_template_create(toucher, 0, 1)
+            api2.edt_create(tmpl2, depv=[c], dep_modes=[DbMode.RO])
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.file_bytes_written == 0
+    assert np.all(np.fromfile(path, np.uint8) == 5)
+
+
+def test_chunk_overlap_rejected(tmp_path):
+    path = str(tmp_path / "f.bin")
+    np.zeros(128, np.uint8).tofile(path)
+    rt = Runtime()
+    raised = {}
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            api2.file_get_chunk(fg, 0, 64)
+            try:
+                api2.file_get_chunk(fg, 32, 64)
+            except ChunkOverlapError:
+                raised["yes"] = True
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert raised.get("yes")
+
+
+def test_enlarging_chunk_grows_file(tmp_path):
+    """§5: a chunk past EOF enlarges a writable file even if not written."""
+    path = str(tmp_path / "f.bin")
+    np.zeros(32, np.uint8).tofile(path)
+    rt = Runtime()
+
+    def noop(paramv, depv, api):
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            c = api2.file_get_chunk(fg, 32, 64)     # extends to 96
+            api2.file_release(fg)
+            tmpl2 = api2.edt_template_create(noop, 0, 1)
+            api2.edt_create(tmpl2, depv=[c], dep_modes=[DbMode.RO])
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    import os
+    assert os.path.getsize(path) == 96
+
+
+def test_readonly_chunk_past_eof_rejected(tmp_path):
+    path = str(tmp_path / "f.bin")
+    np.zeros(32, np.uint8).tofile(path)
+    rt = Runtime()
+    raised = {}
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            try:
+                api2.file_get_chunk(fg, 0, 64)
+            except FileModeError:
+                raised["yes"] = True
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert raised.get("yes")

@@ -1,0 +1,182 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk_qkv(key, b, s, h, kh, hd, hd_v=None, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, kh, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, kh, hd_v or hd),
+                          jnp.float32).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,kh,hd,bq,bk", [
+    (1, 128, 2, 1, 32, 64, 64),
+    (2, 256, 4, 2, 64, 64, 128),
+    (1, 192, 3, 3, 16, 64, 96),     # MHA, non-pow2 heads
+    (2, 128, 8, 2, 128, 128, 128),  # single block pair
+])
+def test_flash_attention_shapes(b, s, h, kh, hd, bq, bk):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(b * s + h), b, s, h, kh, hd)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+    want = jnp.transpose(
+        ref.flash_attention_ref(jnp.transpose(q, (0, 2, 1, 3)),
+                                jnp.transpose(k, (0, 2, 1, 3)),
+                                jnp.transpose(v, (0, 2, 1, 3))),
+        (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, tol):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(0), 2, 128, 4, 2, 32, dtype=dtype)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    want = jnp.transpose(
+        ref.flash_attention_ref(
+            jnp.transpose(q, (0, 2, 1, 3)).astype(jnp.float32),
+            jnp.transpose(k, (0, 2, 1, 3)).astype(jnp.float32),
+            jnp.transpose(v, (0, 2, 1, 3)).astype(jnp.float32)),
+        (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(want), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_attention_window(window):
+    q, k, v = _mk_qkv(jax.random.PRNGKey(7), 2, 256, 4, 2, 32)
+    out = ops.flash_attention(q, k, v, window=window, block_q=64, block_k=64,
+                              interpret=True)
+    want = jnp.transpose(
+        ref.flash_attention_ref(jnp.transpose(q, (0, 2, 1, 3)),
+                                jnp.transpose(k, (0, 2, 1, 3)),
+                                jnp.transpose(v, (0, 2, 1, 3)),
+                                window=window),
+        (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 96, 2, 64, 32, 32),
+    (2, 64, 8, 8, 64, 64),          # chunk == seq (single chunk)
+])
+def test_ssd_scan_shapes(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(b + s + h), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    y_ref, st_ref = ref.ssd_scan_ref(x, dt, A, B, C, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_scan_vs_sequential():
+    """Kernel (chunked) against the O(S) sequential recurrence oracle."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    b, s, h, p, n = 2, 64, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=16, interpret=True)
+    y_ref, st_ref = ref.ssd_scan_sequential(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_ssd_scan_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    b, s, h, p, n = 1, 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p)).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n)).astype(jnp.bfloat16)
+    C = jax.random.normal(ks[4], (b, s, n)).astype(jnp.bfloat16)
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=16, interpret=True)
+    y_ref, st_ref = ref.ssd_scan_ref(x.astype(jnp.float32), dt, A,
+                                     B.astype(jnp.float32),
+                                     C.astype(jnp.float32), chunk=16)
+    np.testing.assert_allclose(np.asarray(y, dtype=np.float32),
+                               np.asarray(y_ref), atol=0.15, rtol=0.1)
+
+
+@pytest.mark.parametrize("nblk_dst,nblk_src,dst_off,src_off,size", [
+    (4, 4, 1, 2, 1),
+    (8, 8, 0, 4, 2),
+    (2, 6, 1, 0, 1),
+])
+def test_partition_copy(nblk_dst, nblk_src, dst_off, src_off, size):
+    blk = 256 * 128
+    dst = jnp.zeros((nblk_dst * blk,), jnp.uint8)
+    src = (jnp.arange(nblk_src * blk) % 251).astype(jnp.uint8)
+    out = ops.partition_copy_bytes(dst, src, dst_off=dst_off * blk,
+                                   src_off=src_off * blk, size=size * blk,
+                                   interpret=True)
+    expect = np.zeros(nblk_dst * blk, np.uint8)
+    expect[dst_off * blk: (dst_off + size) * blk] = \
+        np.asarray(src)[src_off * blk: (src_off + size) * blk]
+    assert np.array_equal(np.asarray(out), expect)
+
+
+def test_flash_mla_dims():
+    """qk head_dim ≠ v head_dim (deepseek MLA layout)."""
+    q, k, v = _mk_qkv(jax.random.PRNGKey(9), 2, 128, 4, 4, 48, hd_v=32)
+    out = ops.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    assert out.shape == (2, 128, 4, 32)
+    want = jnp.transpose(
+        ref.flash_attention_ref(jnp.transpose(q, (0, 2, 1, 3)),
+                                jnp.transpose(k, (0, 2, 1, 3)),
+                                jnp.transpose(v, (0, 2, 1, 3))),
+        (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("cur,window,block_s", [
+    (37, 0, 64), (256, 0, 64), (100, 48, 32), (1, 0, 128), (255, 16, 64),
+])
+def test_flash_decode(cur, window, block_s):
+    """Flash-decode kernel vs the seq-major decode oracle (head-major cache)."""
+    ks = jax.random.split(jax.random.PRNGKey(cur + window), 3)
+    b, kh, g, hd, s = 2, 2, 3, 32, 256
+    q = jax.random.normal(ks[0], (b, 1, kh * g, hd))
+    kc = jax.random.normal(ks[1], (b, kh, s, hd))
+    vc = jax.random.normal(ks[2], (b, kh, s, hd))
+    o = ops.flash_decode(q, kc, vc, jnp.asarray(cur), window=window,
+                         block_s=block_s, interpret=True)
+    want = ref.flash_decode_ref(q, kc, vc, jnp.asarray(cur), window=window)
+    np.testing.assert_allclose(np.asarray(o), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_flash_decode_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    b, kh, g, hd, s = 1, 2, 2, 64, 128
+    q = jax.random.normal(ks[0], (b, 1, kh * g, hd)).astype(jnp.bfloat16)
+    kc = jax.random.normal(ks[1], (b, kh, s, hd)).astype(jnp.bfloat16)
+    vc = jax.random.normal(ks[2], (b, kh, s, hd)).astype(jnp.bfloat16)
+    o = ops.flash_decode(q, kc, vc, jnp.asarray(100), block_s=64,
+                         interpret=True)
+    want = ref.flash_decode_ref(q.astype(jnp.float32),
+                                kc.astype(jnp.float32),
+                                vc.astype(jnp.float32), jnp.asarray(100))
+    np.testing.assert_allclose(np.asarray(o, dtype=np.float32),
+                               np.asarray(want), atol=5e-2, rtol=5e-2)
