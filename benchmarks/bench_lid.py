@@ -42,5 +42,28 @@ def run():
             f"blocking_roundtrips={blk.blocking_roundtrips}->"
             f"{lid.blocking_roundtrips};makespan={blk.makespan:.0f}->"
             f"{lid.makespan:.0f};deferred={lid.messages_deferred};"
+            f"rescans={lid.deferred_rescans};"
             f"speedup={blk.makespan / lid.makespan:.2f}x"))
     return rows
+
+
+def summary():
+    """Machine-readable snapshot for BENCH_lid.json (perf trajectory)."""
+    t0 = time.perf_counter()
+    blk = _chain(False, 256)
+    lid = _chain(True, 256)
+    wall = time.perf_counter() - t0
+    return {
+        "n_objects": 256,
+        "makespan_blocking": blk.makespan,
+        "makespan_lid": lid.makespan,
+        "messages_sent": blk.messages_sent + lid.messages_sent,
+        "messages_deferred": lid.messages_deferred,
+        "deferred_rescans": lid.deferred_rescans,
+        "wall_time_s": wall,
+    }
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

@@ -61,9 +61,31 @@ def _copy_modes(size: int):
     return rt.run()
 
 
+def _fused_copy_scatter(num_parts: int, use_pallas: bool):
+    """§6.3 partition-set materialization: ``num_parts`` disjoint ranges
+    copied from one block into a shadow block, batched per virtual
+    timestamp — one fused kernel launch (or numpy loop) per flush."""
+    rt = Runtime(copy_backend="pallas" if use_pallas else "numpy")
+    psize = 1024          # 128-byte aligned, NOT 32 KiB aligned
+    size = psize * num_parts
+
+    def main(paramv, depv, api):
+        block, ptr = api.db_create(size)
+        ptr[:] = 7
+        api.db_release(block)
+        shadow, _ = api.db_create(size)
+        api.db_release(shadow)
+        for i in range(num_parts):
+            api.db_copy(shadow, i * psize, block, i * psize, psize)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    return rt.run()
+
+
 def run():
     rows = []
-    for n in (2, 8, 32):
+    for n in (2, 8, 32, 64):
         t0 = time.perf_counter()
         rw = _makespan(n, partitioned=False)
         ew = _makespan(n, partitioned=True)
@@ -71,7 +93,8 @@ def run():
         rows.append((
             f"partition.par_n{n}", f"{us:.0f}",
             f"makespan_RW={rw.makespan:.0f};makespan_EW={ew.makespan:.0f};"
-            f"speedup={rw.makespan / ew.makespan:.1f}x"))
+            f"speedup={rw.makespan / ew.makespan:.1f}x;"
+            f"waiter_wakeups={rw.waiter_wakeups}"))
     for size in (1 << 16, 1 << 22):
         t0 = time.perf_counter()
         stats = _copy_modes(size)
@@ -93,4 +116,44 @@ def run():
     us = (time.perf_counter() - t0) * 1e6
     rows.append(("partition.kernel_copy_64k", f"{us:.0f}",
                  "pallas interpret; 2 tiles"))
+
+    # fused multi-range copy: N ragged (non-32KiB) ranges, one pallas_call
+    ranges = tuple((i * 4096, i * 4096, 3 * 128) for i in range(64))
+    dst = jnp.zeros((64 * 4096,), jnp.uint8)
+    src = (jnp.arange(64 * 4096) % 251).astype(jnp.uint8)
+    t0 = time.perf_counter()
+    out = ops.multi_partition_copy_bytes(dst, src, ranges, interpret=True)
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    rows.append(("partition.fused_copy_64r", f"{us:.0f}",
+                 "64 lane-aligned ranges in one pallas_call"))
+
+    for backend, flag in (("numpy", False), ("pallas", True)):
+        t0 = time.perf_counter()
+        st = _fused_copy_scatter(64, use_pallas=flag)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"partition.batch_copy_{backend}", f"{us:.0f}",
+                     f"copied={st.bytes_copied};fused={st.fused_copies};"
+                     f"makespan={st.makespan:.0f}"))
     return rows
+
+
+def summary():
+    """Machine-readable snapshot for BENCH_partition.json (perf trajectory)."""
+    t0 = time.perf_counter()
+    rw = _makespan(64, partitioned=False)
+    ew = _makespan(64, partitioned=True)
+    wall = time.perf_counter() - t0
+    return {
+        "n_tasks": 64,
+        "makespan_rw": rw.makespan,
+        "makespan_ew": ew.makespan,
+        "messages_sent": rw.messages_sent + ew.messages_sent,
+        "waiter_wakeups": rw.waiter_wakeups + ew.waiter_wakeups,
+        "wall_time_s": wall,
+    }
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

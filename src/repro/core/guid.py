@@ -47,17 +47,37 @@ class DbMode(enum.Enum):
     NULL = "null"    # pure control dependence, no data access
 
 
-@dataclasses.dataclass(frozen=True, order=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Guid:
     node: int
     seq: int
     kind: ObjectKind
 
+    def __lt__(self, other: "Guid") -> bool:
+        return (self.node, self.seq, self.kind.value) < \
+            (other.node, other.seq, other.kind.value)
+
+    def __post_init__(self) -> None:
+        # guids key every object table and waiter queue — precompute the
+        # hash once instead of re-hashing the (int, int, enum) tuple per probe
+        object.__setattr__(self, "_hash", hash((self.node, self.seq, self.kind)))
+
+    def __hash__(self) -> int:
+        return self._hash  # type: ignore[attr-defined]
+
+    def __eq__(self, other: object) -> bool:
+        if other is self:
+            return True
+        if not isinstance(other, Guid):
+            return NotImplemented
+        return (self.node == other.node and self.seq == other.seq
+                and self.kind is other.kind)
+
     def __repr__(self) -> str:  # compact, stable for traces
         return f"G({self.node}:{self.seq}:{self.kind.value})"
 
 
-@dataclasses.dataclass(frozen=True, order=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class Lid:
     """A future for a :class:`Guid` (paper §3).
 
@@ -67,6 +87,22 @@ class Lid:
 
     node: int
     seq: int
+
+    def __lt__(self, other: "Lid") -> bool:
+        return (self.node, self.seq) < (other.node, other.seq)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "_hash", hash((self.node, self.seq)))
+
+    def __hash__(self) -> int:
+        return self._hash  # type: ignore[attr-defined]
+
+    def __eq__(self, other: object) -> bool:
+        if other is self:
+            return True
+        if not isinstance(other, Lid):
+            return NotImplemented
+        return self.node == other.node and self.seq == other.seq
 
     def __repr__(self) -> str:
         return f"L({self.node}:{self.seq})"

@@ -43,6 +43,17 @@ class FileModeError(OcrError):
     pass
 
 
+def spans_overlap(spans) -> bool:
+    """True if any of the half-open ``(start, end)`` spans intersect.
+
+    Shared by the §6.3 copy batching (runtime) and the fused kernel
+    wrapper (kernels.ops) so destination-disjointness means the same
+    thing everywhere; touching spans (``end == start``) do not overlap.
+    """
+    ordered = sorted(spans)
+    return any(b[0] < a[1] for a, b in zip(ordered, ordered[1:]))
+
+
 @dataclasses.dataclass
 class EventObj:
     guid: Guid
@@ -80,6 +91,13 @@ class EdtObj:
     start_time: float = -1.0
     end_time: float = -1.0
     destroyed: bool = False
+    # §6.2 ancestor-deadlock check runs once per EDT per partition epoch:
+    # slots are frozen when the task becomes ready, so retries skip it
+    # unless a zero-copy partition copy changed some ancestry since
+    # (Runtime._partition_epoch)
+    deadlock_epoch: int = -1
+    # the blocking DB guid whose waiter queue this EDT currently sits in
+    waiting_on: Optional[Guid] = None
 
 
 @dataclasses.dataclass

@@ -28,13 +28,14 @@ interval, and ``Stats.makespan`` is the completion time of the whole graph.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 import itertools
 import os
 import random
 import struct
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -83,6 +84,7 @@ from .objects import (
     PartitionStaticError,
     TemplateObj,
     UNSET,
+    spans_overlap,
 )
 
 __all__ = [
@@ -104,13 +106,16 @@ class Stats:
     messages_remote: int = 0
     messages_deferred: int = 0
     deferred_patched: int = 0
+    deferred_rescans: int = 0
     blocking_roundtrips: int = 0
     creator_calls: int = 0
     tasks_executed: int = 0
+    waiter_wakeups: int = 0
     bytes_copied: int = 0
     bytes_zero_copy: int = 0
     file_bytes_read: int = 0
     file_bytes_written: int = 0
+    fused_copies: int = 0
     makespan: float = 0.0
 
     def snapshot(self) -> Dict[str, float]:
@@ -125,8 +130,14 @@ class _Node:
     lid_seq: int = 0
     objects: Dict[Guid, Any] = dataclasses.field(default_factory=dict)
     lid_table: Dict[Lid, Optional[Guid]] = dataclasses.field(default_factory=dict)
-    # messages held locally until all their unresolved LIDs are patched
+    # messages held locally until all their unresolved LIDs are patched;
+    # a message is indexed under *every* unresolved LID it references, so
+    # one MMap patch releases it iff it was the last unresolved one — no
+    # re-deferral rescans (see Message._blocked_on)
     deferred: Dict[Lid, List[Message]] = dataclasses.field(default_factory=dict)
+    # count of LIDs allocated on this node that are still unresolved; lets
+    # send() skip the lids() allocation+scan entirely on the common path
+    unresolved_lids: int = 0
 
 
 class Runtime:
@@ -140,6 +151,7 @@ class Runtime:
         seed: int = 0,
         jitter: float = 0.0,
         trace: bool = False,
+        copy_backend: str = "numpy",
     ):
         self.num_nodes = num_nodes
         self.net_latency = float(net_latency)
@@ -147,6 +159,7 @@ class Runtime:
         self.jitter = float(jitter)
         self.rng = random.Random(seed)
         self.trace = trace
+        self.copy_backend = copy_backend  # "numpy" | "pallas" (§6.3 fallback)
         self.nodes = [_Node(i) for i in range(num_nodes)]
         self.stats = Stats()
         self.clock = 0.0
@@ -157,8 +170,21 @@ class Runtime:
         self.shutdown_requested = False
         # lid -> in-flight message that will bind it (for forced resolution)
         self._pending_lid_msg: Dict[Lid, Message] = {}
-        # db guid -> EDTs waiting for locks
-        self._lock_waiters: List[Guid] = []
+        # per-DB FIFO waiter queues: blocking db guid -> deque of EdtObj;
+        # a release wakes only waiters of the DB whose state changed.
+        # EdtObj.waiting_on marks which queue an EDT currently sits in
+        # (dedup + O(1) staleness checks without hashing guids).
+        self._db_waiters: Dict[Guid, Deque[EdtObj]] = {}
+        # db guid -> ancestor chain (parent links only change when a
+        # zero-copy §6.3 partition copy assigns one, which invalidates)
+        self._ancestor_cache: Dict[Guid, Tuple[Guid, ...]] = {}
+        # bumped when a zero-copy partition copy rewires ancestry; EDTs
+        # re-run the §6.2 deadlock check lazily when their epoch is stale
+        self._partition_epoch = 0
+        # §6.3 same-timestamp copy batching (flushed through one fused
+        # kernel launch per (src, dst) pair when a partition set materializes)
+        self._copy_batch: List[MDbCopy] = []
+        self._copy_flush_scheduled = False
         # registry so file descriptors can be decoded from raw pointers (§5)
         self.file_registry: List[Guid] = []
 
@@ -181,6 +207,7 @@ class Runtime:
         n.lid_seq += 1
         lid = Lid(node, n.lid_seq)
         n.lid_table[lid] = None
+        n.unresolved_lids += 1
         return lid
 
     def _pick_node(self, hint: Optional[int]) -> int:
@@ -210,19 +237,28 @@ class Runtime:
     def send(self, msg: Message, src: int, dst: int, at: Optional[float] = None) -> None:
         msg.stamp(src, dst)
         when = self.clock if at is None else at
+        node = self.nodes[src]
+        # Fast path: a node with no outstanding LIDs can never defer, so the
+        # lids() allocation+scan is skipped entirely (the common case).
+        if node.unresolved_lids == 0:
+            self._transmit(msg, when)
+            return
         # §3: messages referencing a locally-unresolved LID are deferred on
         # the issuing node.  The *binding* lid of MCreate/MMapGet travels.
         binding = getattr(msg, "lid", None)
-        unresolved = [
+        unresolved = {
             l for l in msg.lids()
-            if l != binding and l.node == src and self.nodes[src].lid_table.get(l) is None
-        ]
+            if l != binding and l.node == src and node.lid_table.get(l) is None
+        }
         if unresolved:
             self.stats.messages_deferred += 1
-            self._log("DEFER", type(msg).__name__, "on", unresolved)
-            # park on the first unresolved lid; re-checked after each patch
-            self.nodes[src].deferred.setdefault(unresolved[0], []).append(msg)
-            msg._deliver_at = when  # type: ignore[attr-defined]
+            self._log("DEFER", type(msg).__name__, "on", sorted(unresolved))
+            # index under *every* unresolved lid: the patch that empties
+            # _blocked_on transmits; the others just shrink the set
+            msg._blocked_on = unresolved       # type: ignore[attr-defined]
+            msg._deliver_at = when             # type: ignore[attr-defined]
+            for l in unresolved:
+                node.deferred.setdefault(l, []).append(msg)
             return
         self._transmit(msg, when)
 
@@ -244,9 +280,11 @@ class Runtime:
     def run(self, until: Optional[float] = None) -> Stats:
         """Process events until quiescent, shutdown, or ``until``."""
         while self._heap and not self.shutdown_requested:
-            t, _, kind, payload = heapq.heappop(self._heap)
+            t, tick, kind, payload = heapq.heappop(self._heap)
             if until is not None and t > until:
-                heapq.heappush(self._heap, (t, next(self._tick), kind, payload))
+                # preserve the original tick: a fresh one would reorder the
+                # event against same-timestamp peers on resume
+                heapq.heappush(self._heap, (t, tick, kind, payload))
                 break
             self.clock = max(self.clock, t)
             if kind == "msg":
@@ -255,6 +293,8 @@ class Runtime:
                 self._dispatch(payload)
             elif kind == "task_end":
                 self._task_end(payload)
+            elif kind == "copy_flush":
+                self._flush_copy_batch()
             elif kind == "db_copy":
                 self._do_db_copy(payload)
         self.stats.makespan = self.clock
@@ -329,19 +369,18 @@ class Runtime:
 
     def _apply_lid_binding(self, lid: Lid, guid: Guid) -> None:
         node = self.nodes[lid.node]
+        if node.lid_table.get(lid) is None and lid in node.lid_table:
+            node.unresolved_lids -= 1
         node.lid_table[lid] = guid
         waiting = node.deferred.pop(lid, [])
         for m in waiting:
             self.stats.deferred_patched += 1
             m.patch({lid: guid})
-            # re-submit: may still have other unresolved lids
-            still = [
-                l for l in m.lids()
-                if l != getattr(m, "lid", None)
-                and l.node == lid.node and node.lid_table.get(l) is None
-            ]
-            if still:
-                node.deferred.setdefault(still[0], []).append(m)
+            blocked = m._blocked_on  # type: ignore[attr-defined]
+            blocked.discard(lid)
+            if blocked:
+                # still parked under its remaining lids — no rescan needed
+                self.stats.deferred_rescans += 1
             else:
                 self._transmit(m, max(self.clock, getattr(m, "_deliver_at", self.clock)))
 
@@ -438,13 +477,20 @@ class Runtime:
                     out.append((db, mode))
         return out
 
-    def _ancestors(self, db: DbObj) -> List[Guid]:
-        out = []
+    def _ancestors(self, db: DbObj) -> Tuple[Guid, ...]:
+        # parent links are fixed at creation and a parent outlives its
+        # partitions, so the chain is computed once per DB and cached
+        cached = self._ancestor_cache.get(db.guid)
+        if cached is not None:
+            return cached
+        out: List[Guid] = []
         cur = db
         while cur.parent is not None:
             out.append(cur.parent)
             cur = self.lookup(cur.parent)
-        return out
+        chain = tuple(out)
+        self._ancestor_cache[db.guid] = chain
+        return chain
 
     def _check_deadlock(self, deps: List[Tuple[DbObj, DbMode]]) -> None:
         guids = {d.guid for d, _ in deps}
@@ -454,36 +500,74 @@ class Runtime:
                     f"task acquires data block {d.guid} and one of its ancestors "
                     f"— §6.2 forbids parent+partition in one task (deadlock)")
 
-    def _try_grant(self, edt: EdtObj) -> None:
+    def _try_grant(self, edt: EdtObj) -> Optional[Guid]:
+        """Grant all locks and execute, or park on the first blocking DB.
+
+        Returns the blocking DB's guid, or None if the task was granted.
+        The deadlock check runs once per EDT per partition epoch: slots
+        are frozen by the time the task is ready, so the result can only
+        change when a zero-copy partition copy rewires ancestry (which
+        bumps ``_partition_epoch``).
+        """
         deps = self._dep_dbs(edt)
-        self._check_deadlock(deps)
+        if edt.deadlock_epoch != self._partition_epoch:
+            self._check_deadlock(deps)
+            edt.deadlock_epoch = self._partition_epoch
         for db, mode in deps:
             # §6.2 quiescence: a partitioned block is unavailable in any mode
-            if db.partitions:
-                self._enqueue_waiter(edt)
-                return
-            if not db.available(mode):
-                self._enqueue_waiter(edt)
-                return
+            if db.partitions or not db.available(mode):
+                self._enqueue_waiter(edt, db.guid)
+                return db.guid
         for db, mode in deps:
             if mode in (DbMode.RO, DbMode.CONST):
                 db.readers += 1
             elif mode in (DbMode.RW, DbMode.EW):
                 db.writer = edt.guid
-            if mode in (DbMode.RW, DbMode.EW):
                 db.dirty = True
         self._execute(edt)
+        return None
 
-    def _enqueue_waiter(self, edt: EdtObj) -> None:
-        if edt.guid not in self._lock_waiters:
-            self._lock_waiters.append(edt.guid)
+    def _enqueue_waiter(self, edt: EdtObj, db_guid: Guid) -> None:
+        if edt.waiting_on is not None:
+            return
+        edt.waiting_on = db_guid
+        self._db_waiters.setdefault(db_guid, collections.deque()).append(edt)
 
-    def _retry_waiters(self) -> None:
-        waiters, self._lock_waiters = self._lock_waiters, []
-        for g in waiters:
-            edt = self.try_lookup(g)
-            if edt is not None and edt.state == "ready":
-                self._try_grant(edt)
+    def _wake_waiters(self, db_guid: Guid) -> None:
+        """Retry waiters of one DB in FIFO order after its state changed.
+
+        Stops at the first waiter that re-blocks on this same DB: the head
+        keeps its place (no starvation of writers behind a reader stream)
+        and the tail is not pointlessly retried — one release wakes O(1)
+        grantable tasks instead of re-running _try_grant for every waiter.
+        """
+        # re-fetch the queue every iteration: granting a waiter runs its
+        # task body synchronously, which can re-enter _wake_waiters for
+        # this same DB and replace (or delete) the deque under us
+        while True:
+            queue = self._db_waiters.get(db_guid)
+            if not queue:
+                break
+            edt = queue[0]
+            if edt.waiting_on != db_guid:
+                queue.popleft()        # stale: re-queued elsewhere meanwhile
+                continue
+            queue.popleft()
+            edt.waiting_on = None
+            if edt.state != "ready":
+                continue
+            self.stats.waiter_wakeups += 1
+            if self._try_grant(edt) == db_guid:
+                # re-blocked: _enqueue_waiter appended it; restore its FIFO
+                # head position, then stop retrying the rest
+                queue = self._db_waiters.get(db_guid)
+                if queue and queue[-1] is edt:
+                    queue.pop()
+                    queue.appendleft(edt)
+                break
+        queue = self._db_waiters.get(db_guid)
+        if queue is not None and not queue:
+            self._db_waiters.pop(db_guid, None)
 
     def _materialize(self, db: DbObj) -> np.ndarray:
         if db.buffer is None:
@@ -525,13 +609,16 @@ class Runtime:
     def _task_end(self, payload: Tuple[Guid, Any]) -> None:
         guid, ret = payload
         edt: EdtObj = self.lookup(guid)
+        released: List[DbObj] = []
         for db, mode in self._dep_dbs(edt):
             if mode in (DbMode.RO, DbMode.CONST):
                 db.readers = max(0, db.readers - 1)
             elif db.writer == guid:
                 db.writer = None
             if db.pending_destroy and not db.locked():
-                self._destroy_db(db)
+                self._destroy_db(db)   # wakes its waiters itself
+            else:
+                released.append(db)
         edt.state = "done"
         if edt.output_event is not None:
             ret_r = self.resolve(ret) if ret is not None else NULL_GUID
@@ -543,7 +630,9 @@ class Runtime:
                                    db=ret_r if isinstance(ret_r, Guid) else NULL_GUID),
                           edt.node, self._owner(edt.output_event))
         self.nodes[edt.node].objects.pop(guid, None)
-        self._retry_waiters()
+        # wake only waiters of the DBs whose lock state actually changed
+        for db in released:
+            self._wake_waiters(db.guid)
 
     # -- destruction ---------------------------------------------------------
 
@@ -568,6 +657,12 @@ class Runtime:
     def _destroy_db(self, db: DbObj) -> None:
         if db.partitions:
             raise OcrError(f"destroying {db.guid} while partitions are live")
+        # copies issued before a same-timestamp destroy must land first
+        # (batching must not reorder them past the destruction)
+        if self._copy_batch and any(
+                db.guid in (self.resolve(m.src), self.resolve(m.dst))
+                for m in self._copy_batch):
+            self._flush_copy_batch()
         # unlink from parent partition table
         if db.parent is not None:
             parent = self.try_lookup(db.parent)
@@ -577,7 +672,9 @@ class Runtime:
                     parent.static_partitioning = False
                     if parent.pending_destroy and not parent.locked():
                         self._destroy_db(parent)
-                self._retry_waiters()
+                    else:
+                        # last partition gone: the parent is acquirable again
+                        self._wake_waiters(parent.guid)
         # §5 write-back: dirty chunks flush; enlarging chunks enlarge
         if db.file_guid is not None:
             f: FileObj = self.lookup(db.file_guid)
@@ -591,6 +688,9 @@ class Runtime:
                 f.closed = True
         db.destroyed = True
         self.nodes[db.guid.node].objects.pop(db.guid, None)
+        self._ancestor_cache.pop(db.guid, None)
+        # waiters parked on a destroyed DB retry with the dep dropped
+        self._wake_waiters(db.guid)
 
     # -- labeled maps (§4) ----------------------------------------------------
 
@@ -620,7 +720,108 @@ class Runtime:
     # -- db copy (§6.3) --------------------------------------------------------
 
     def _on_MDbCopy(self, msg: MDbCopy) -> None:
+        # Materialized range copies (plain, or §6.3 partition copies that do
+        # not take the zero-copy view path) are batched: all copies landing
+        # at the same virtual timestamp flush together, one fused kernel
+        # launch per (src, dst) pair, instead of one launch per partition.
+        if self._is_batchable_copy(msg):
+            self._copy_batch.append(msg)
+            if not self._copy_flush_scheduled:
+                self._copy_flush_scheduled = True
+                heapq.heappush(self._heap,
+                               (self.clock, next(self._tick), "copy_flush", None))
+            return
+        # a non-batchable copy (zero-copy view, PARTITION_BACK) executes
+        # immediately; land earlier-arrived batched copies first so the
+        # batch cannot be reordered past it (arrival-order semantics)
+        if self._copy_batch:
+            self._flush_copy_batch()
         self._do_db_copy(msg)
+
+    def _is_batchable_copy(self, msg: MDbCopy) -> bool:
+        if msg.copy_type == DB_COPY_PARTITION_BACK:
+            return False       # entails destruction of src: keep synchronous
+        if msg.copy_type == DB_COPY_PARTITION:
+            dst: DbObj = self.lookup(self.resolve(msg.dst))
+            whole_dst = msg.dst_offset == 0 and msg.size == dst.size
+            if dst.no_acquire and whole_dst and dst.buffer is None:
+                return False   # zero-copy view path: no bytes move
+        return True
+
+    def _flush_copy_batch(self) -> None:
+        batch, self._copy_batch = self._copy_batch, []
+        self._copy_flush_scheduled = False
+        if not batch:
+            return
+        resolved = [(self.resolve(m.src), self.resolve(m.dst), m)
+                    for m in batch]
+        # Grouping by (src, dst) reorders copies across groups, which is
+        # only sound when arrival order cannot matter: no copy reads a DB
+        # another copy writes, and no destination byte is written twice.
+        # Otherwise replay the batch sequentially (seed semantics:
+        # last-writer-wins in arrival order, reads see earlier writes).
+        dst_ids = {d for _, d, _ in resolved}
+        ordered = any(s in dst_ids for s, _, _ in resolved)
+        if not ordered:
+            by_dst: Dict[Guid, List[Tuple[int, int]]] = {}
+            for _, d, m in resolved:
+                by_dst.setdefault(d, []).append(
+                    (m.dst_offset, m.dst_offset + m.size))
+            ordered = any(spans_overlap(s) for s in by_dst.values())
+        if ordered:
+            for src_id, dst_id, m in resolved:
+                sbuf = self._materialize(self.lookup(src_id))
+                dbuf = self._materialize(self.lookup(dst_id))
+                dbuf[m.dst_offset: m.dst_offset + m.size] = \
+                    sbuf[m.src_offset: m.src_offset + m.size]
+                self._copy_done(m)
+            return
+        groups: Dict[Tuple[Guid, Guid], List[MDbCopy]] = {}
+        for src_id, dst_id, msg in resolved:
+            groups.setdefault((src_id, dst_id), []).append(msg)
+        for (src_id, dst_id), msgs in groups.items():
+            src: DbObj = self.lookup(src_id)
+            dst: DbObj = self.lookup(dst_id)
+            sbuf = self._materialize(src)
+            dbuf = self._materialize(dst)
+            ranges = [(m.dst_offset, m.src_offset, m.size) for m in msgs]
+            if not self._fused_copy(dbuf, sbuf, ranges):
+                for (d_off, s_off, size) in ranges:
+                    dbuf[d_off: d_off + size] = sbuf[s_off: s_off + size]
+            for m in msgs:
+                self._copy_done(m)
+
+    def _copy_done(self, m: MDbCopy) -> None:
+        self.stats.bytes_copied += m.size
+        ev = self.resolve(m.completion_event)
+        if isinstance(ev, Guid) and not is_null(ev):
+            self.send(MSatisfy(target=ev, slot=0, db=NULL_GUID),
+                      m.dst_node, ev.node)
+
+    def _fused_copy(self, dbuf: np.ndarray, sbuf: np.ndarray,
+                    ranges: List[Tuple[int, int, int]]) -> bool:
+        """Route a multi-range copy through the fused Pallas kernel.
+
+        Returns False (caller falls back to numpy) unless the backend is
+        enabled, the batch is big enough to amortize a launch, every range
+        is lane-aligned (128 B) and non-empty, destinations are disjoint
+        (overlaps need the sequential last-writer-wins semantics of the
+        numpy path), and jax is importable.
+        """
+        if self.copy_backend != "pallas" or len(ranges) < 2:
+            return False
+        if any(d % 128 or s % 128 or n % 128 or n <= 0 for d, s, n in ranges):
+            return False
+        if spans_overlap((d, d + n) for d, _, n in ranges):
+            return False
+        try:
+            from ..kernels import ops
+        except Exception:       # jax unavailable: gate, don't require it
+            return False
+        out = ops.multi_partition_copy_bytes(dbuf, sbuf, tuple(ranges))
+        dbuf[:] = np.asarray(out)
+        self.stats.fused_copies += 1
+        return True
 
     def _do_db_copy(self, msg: MDbCopy) -> None:
         dst: DbObj = self.lookup(self.resolve(msg.dst))
@@ -640,6 +841,13 @@ class Runtime:
                 dst.offset_in_parent = msg.src_offset
                 src.partitions[dst.guid] = (msg.src_offset, msg.size)
                 self.stats.bytes_zero_copy += msg.size
+                # dst gained an ancestor: cached chains keyed by (or passing
+                # through) dst are stale, and every EDT's cached §6.2 result
+                # may be too — bump the epoch so retries re-check lazily
+                self._ancestor_cache = {
+                    g: ch for g, ch in self._ancestor_cache.items()
+                    if g != dst.guid and dst.guid not in ch}
+                self._partition_epoch += 1
             else:
                 sbuf = self._materialize(src)
                 dbuf = self._materialize(dst)
@@ -892,8 +1100,9 @@ class TaskCtx:
         if self.edt is not None and d.writer == self.edt.guid:
             d.writer = None
             if d.pending_destroy and not d.locked():
-                self.rt._destroy_db(d)
-            self.rt._retry_waiters()
+                self.rt._destroy_db(d)   # wakes its waiters itself
+            else:
+                self.rt._wake_waiters(d.guid)
 
     def db_destroy(self, db: Any) -> None:
         self.rt.send(MDestroy(target=self.rt.resolve(db)),

@@ -26,6 +26,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
+# resolve whichever this jax provides
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 NEG_INF = -1e30
 
 
@@ -125,7 +130,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, hd_v), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -16,6 +16,7 @@ from . import flash_attention as _fa
 from . import flash_decode as _fd
 from . import partition_copy as _pc
 from . import ssd_scan as _ssd
+from ..core.objects import spans_overlap
 
 
 def _default_interpret() -> bool:
@@ -53,21 +54,68 @@ def ssd_scan(x, dt, A, B, C, *, chunk=128, interpret=None):
 @functools.partial(jax.jit, static_argnames=("dst_off", "src_off", "size",
                                              "interpret"))
 def partition_copy_bytes(dst, src, *, dst_off, src_off, size, interpret=None):
-    """§6.3 fallback copy on flat byte buffers (lengths multiple of 128·256).
+    """§6.3 fallback copy on flat byte buffers.
 
     dst/src: (N,) uint8.  Returns new dst with src[src_off:src_off+size]
-    written at dst_off.
+    written at dst_off.  Offsets/size need only be lane-aligned (128 B);
+    32 KiB-aligned copies keep the tile-per-grid-step fast path, anything
+    else routes through the fused masked-edge kernel as a single range.
     """
     interpret = _default_interpret() if interpret is None else interpret
     lanes = _pc.LANES
     block = 256 * lanes
     assert dst.shape[0] % lanes == 0 and src.shape[0] % lanes == 0
-    assert dst_off % block == 0 and src_off % block == 0 and size % block == 0
+    assert dst_off % lanes == 0 and src_off % lanes == 0 and size % lanes == 0
     d2 = dst.reshape(-1, lanes)
     s2 = src.reshape(-1, lanes)
-    out = _pc.partition_copy(d2, s2, dst_off // lanes, src_off // lanes,
-                             size // lanes, interpret=interpret)
+    if dst_off % block == 0 and src_off % block == 0 and size % block == 0:
+        out = _pc.partition_copy(d2, s2, dst_off // lanes, src_off // lanes,
+                                 size // lanes, interpret=interpret)
+    else:
+        out = _pc.multi_partition_copy(
+            d2, s2, ((dst_off // lanes, src_off // lanes, size // lanes),),
+            interpret=interpret)
     return out.reshape(-1)
+
+
+def multi_partition_copy_bytes(dst, src, ranges, *, block_rows=256,
+                               interpret=None):
+    """Fused §6.3 copy of a whole partition set in one kernel launch.
+
+    dst/src: (N,) uint8 byte buffers.  ``ranges`` is a sequence of
+    ``(dst_off, src_off, size)`` byte triples, each a multiple of 128
+    (lane granularity — NOT the 32 KiB tile granularity of
+    :func:`partition_copy_bytes`).  Destination ranges must be mutually
+    disjoint; overlap raises ``ValueError`` (§6.2 partitions are disjoint
+    by construction, so an overlap is a caller bug).  Returns the new dst.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    lanes = _pc.LANES
+    nd, ns = int(dst.shape[0]), int(src.shape[0])
+    row_ranges = []
+    for (d_off, s_off, size) in ranges:
+        if size <= 0:
+            raise ValueError(f"empty copy range ({d_off},{s_off},{size})")
+        if d_off % lanes or s_off % lanes or size % lanes:
+            raise ValueError(
+                f"range ({d_off},{s_off},{size}) not 128-byte aligned")
+        if d_off + size > nd or s_off + size > ns or d_off < 0 or s_off < 0:
+            raise ValueError(
+                f"range ({d_off},{s_off},{size}) out of bounds "
+                f"(dst {nd}, src {ns})")
+        row_ranges.append((d_off // lanes, s_off // lanes, size // lanes))
+    if spans_overlap((d, d + n) for d, _, n in row_ranges):
+        raise ValueError("destination ranges overlap")
+    pad_d = (-nd) % lanes
+    pad_s = (-ns) % lanes
+    d2 = (jnp.pad(dst, (0, pad_d)) if pad_d else jnp.asarray(dst)) \
+        .reshape(-1, lanes)
+    s2 = (jnp.pad(src, (0, pad_s)) if pad_s else jnp.asarray(src)) \
+        .reshape(-1, lanes)
+    out = _pc.multi_partition_copy(d2, s2, tuple(row_ranges),
+                                   block_rows=block_rows,
+                                   interpret=interpret)
+    return out.reshape(-1)[:nd]
 
 
 @functools.partial(jax.jit, static_argnames=("window", "block_s",

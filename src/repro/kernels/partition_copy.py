@@ -1,11 +1,16 @@
-"""Pallas TPU kernel materializing §6.3 ``ocrDbCopy(DB_COPY_PARTITION)``.
+"""Pallas TPU kernels materializing §6.3 ``ocrDbCopy(DB_COPY_PARTITION)``.
 
 When the zero-copy view path is unavailable (partition crosses a device
 boundary, or the runtime chose to materialize), the copy itself is the
-fallback.  This kernel is that fallback as a TPU-native tiled HBM→HBM copy:
-lane-aligned (rows × 128) tiles staged through VMEM, offsets expressed in
-tiles — i.e. the §6.2 rule "partitions are contiguous, non-overlapping
-ranges" becomes "tile-aligned row ranges".
+fallback.  Two kernels implement it:
+
+* :func:`partition_copy` — one contiguous tile-aligned range, one grid step
+  per (rows × 128) tile staged through VMEM.
+* :func:`multi_partition_copy` — a whole *partition set* in one
+  ``pallas_call``: N disjoint ranges at lane (128 B) granularity, driven by
+  scalar-prefetched per-block source/dest row tables.  Range lengths need
+  not be block-aligned; edge tiles are handled by a masked read-modify-write
+  so untouched destination rows are preserved bit-exactly.
 
 dst/src are 2-D (N, 128) views of the flat byte buffers.
 """
@@ -15,6 +20,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -56,3 +62,85 @@ def partition_copy(dst: jax.Array, src: jax.Array, dst_off_rows: int,
         input_output_aliases={1: 0},
         interpret=interpret,
     )(src, dst)
+
+
+def _block_tables(ranges, block_rows: int):
+    """Flatten row ranges into per-grid-block (dst, src, valid-rows) tables."""
+    d_tab, s_tab, n_tab = [], [], []
+    for (d0, s0, rows) in ranges:
+        nb = -(-rows // block_rows)
+        for b in range(nb):
+            d_tab.append(d0 + b * block_rows)
+            s_tab.append(s0 + b * block_rows)
+            n_tab.append(min(block_rows, rows - b * block_rows))
+    return (np.asarray(d_tab, np.int32), np.asarray(s_tab, np.int32),
+            np.asarray(n_tab, np.int32))
+
+
+def multi_partition_copy(dst: jax.Array, src: jax.Array,
+                         ranges, *, block_rows: int = 256,
+                         interpret: bool = False) -> jax.Array:
+    """Execute N disjoint-range copies in a single ``pallas_call``.
+
+    ``ranges`` is a tuple of ``(dst_row, src_row, rows)`` row triples
+    (a row is one 128-byte lane).  Offsets are lane-granular — no block
+    alignment required; each range's edge tile is masked.  The grid has
+    one step per ``block_rows`` tile of any range; the tile's source/dest
+    rows come from scalar-prefetched tables, so the whole partition set
+    costs one kernel launch.  Destination ranges must be disjoint
+    (callers validate); results are bit-exact vs range-by-range numpy
+    assignment.
+
+    The offset tables are runtime operands: only the block *count* (their
+    length) and buffer shapes key the jit cache, so flushes with new
+    offsets but the same number of tiles reuse the compiled kernel.
+    """
+    assert dst.shape[1] == LANES and src.shape[1] == LANES
+    d_tab, s_tab, n_tab = _block_tables(ranges, block_rows)
+    if d_tab.shape[0] == 0:
+        return dst
+    return _multi_partition_copy_impl(
+        dst, src, jnp.asarray(d_tab), jnp.asarray(s_tab), jnp.asarray(n_tab),
+        block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _multi_partition_copy_impl(dst: jax.Array, src: jax.Array,
+                               d_tab: jax.Array, s_tab: jax.Array,
+                               n_tab: jax.Array, *, block_rows: int,
+                               interpret: bool) -> jax.Array:
+    total_blocks = int(d_tab.shape[0])
+    nd = dst.shape[0]
+    # pad by one block so edge tiles can load/store block_rows full rows;
+    # masked RMW keeps the pad rows' (and any untouched rows') contents
+    dst_p = jnp.pad(dst, ((0, block_rows), (0, 0)))
+    src_p = jnp.pad(src, ((0, block_rows), (0, 0)))
+
+    def kernel(d_ref, s_ref, n_ref, src_ref, dst_in_ref, o_ref):
+        del dst_in_ref  # aliased with o_ref; read through o_ref for RMW
+        i = pl.program_id(0)
+        dr = d_ref[i]
+        sr = s_ref[i]
+        nv = n_ref[i]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (block_rows, LANES), 0)
+        val = src_ref[pl.ds(sr, block_rows), :]
+        cur = o_ref[pl.ds(dr, block_rows), :]
+        o_ref[pl.ds(dr, block_rows), :] = jnp.where(rows < nv, val, cur)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(total_blocks,),
+        in_specs=[pl.BlockSpec(src_p.shape, lambda i, *_: (0, 0)),
+                  pl.BlockSpec(dst_p.shape, lambda i, *_: (0, 0))],
+        out_specs=pl.BlockSpec(dst_p.shape, lambda i, *_: (0, 0)),
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_p.shape, dst_p.dtype),
+        # operand indices include the 3 scalar-prefetch tables: dst_in is 4
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(jnp.asarray(d_tab), jnp.asarray(s_tab), jnp.asarray(n_tab),
+      src_p, dst_p)
+    return out[:nd]

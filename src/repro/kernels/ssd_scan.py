@@ -20,6 +20,11 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
+# resolve whichever this jax provides
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, st_out_ref,
                 state_ref, *, chunk: int, num_chunks: int):
@@ -105,7 +110,7 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt3, A.astype(jnp.float32), B, C)

@@ -7,6 +7,8 @@ write-back correctness).
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DbMode, EDT_PROP_MAPPED, NULL_GUID, OcrError,

@@ -1,0 +1,318 @@
+"""Message-layer hot paths: the zero-outstanding-LID send() fast path, the
+per-LID deferred-message index (no re-deferral rescans), and the §6.3
+same-timestamp copy batching with the fused-kernel backend."""
+import numpy as np
+import pytest
+
+from repro.core import (DbMode, EDT_PROP_LID, EventKind, NULL_GUID, Runtime,
+                        UNINITIALIZED_GUID, spawn_main)
+from repro.core.guid import ObjectKind
+from repro.core.messages import MSatisfy
+
+
+def test_no_lids_no_deferral_bookkeeping():
+    """A program that never requests LIDs exercises only the send() fast
+    path: nothing is deferred, nothing parked, no unresolved-LID debt."""
+    rt = Runtime(num_nodes=4, net_latency=2.0)
+
+    def w(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(w, 0, 1)
+        for i in range(8):
+            t, _ = api.edt_create(tmpl, depv=[UNINITIALIZED_GUID],
+                                  placement=1 + (i % 3))
+            api.add_dependence(NULL_GUID, t, 0, DbMode.NULL)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.tasks_executed == 9
+    assert stats.messages_deferred == 0
+    assert stats.deferred_rescans == 0
+    for node in rt.nodes:
+        assert node.unresolved_lids == 0
+        assert not node.deferred
+
+
+def test_lid_debt_returns_to_zero():
+    """Every allocated LID is eventually resolved and the per-node
+    outstanding count returns to zero (the fast path re-arms)."""
+    rt = Runtime(num_nodes=4, net_latency=5.0)
+
+    def w(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(w, 0, 1)
+        for i in range(12):
+            t, _ = api.edt_create(tmpl, depv=[UNINITIALIZED_GUID],
+                                  props=EDT_PROP_LID, placement=1 + (i % 3))
+            api.add_dependence(NULL_GUID, t, 0, DbMode.NULL)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.messages_deferred == 12
+    assert stats.deferred_patched == 12
+    assert stats.deferred_rescans == 0       # single-LID messages: no rescans
+    for node in rt.nodes:
+        assert node.unresolved_lids == 0
+        assert not node.deferred
+
+
+def test_multi_lid_message_indexed_under_every_lid():
+    """A message referencing two unresolved LIDs is parked under both; the
+    first patch shrinks its blocked set (counted as a rescan-avoided
+    touch), the second transmits it — exactly once."""
+    rt = Runtime(num_nodes=2)
+    from repro.core import TaskCtx
+    ctx = TaskCtx(rt, 0, None)
+    ev = ctx.event_create(EventKind.STICKY)
+    db, _ = ctx.db_create(16)
+
+    l1 = rt._alloc_lid(0)
+    l2 = rt._alloc_lid(0)
+    msg = MSatisfy(target=l1, slot=0, db=l2)
+    rt.send(msg, 0, 0)
+    assert rt.stats.messages_deferred == 1
+    assert l1 in rt.nodes[0].deferred and l2 in rt.nodes[0].deferred
+
+    rt._apply_lid_binding(l1, ev)
+    assert rt.stats.deferred_patched == 1
+    assert rt.stats.deferred_rescans == 1    # still parked under l2
+    assert rt.stats.messages_sent == 0       # not transmitted yet
+
+    rt._apply_lid_binding(l2, db)
+    assert rt.stats.deferred_patched == 2
+    assert rt.stats.messages_sent == 1       # released exactly once
+    rt.run()
+    assert rt.lookup(ev).satisfied
+    assert rt.lookup(ev).payload == db
+    assert rt.nodes[0].unresolved_lids == 0
+
+
+def _scatter(backend, num_ranges=8, psize=1024):
+    """num_ranges disjoint lane-aligned copies block→shadow at one
+    timestamp; returns (shadow contents, stats)."""
+    rt = Runtime(copy_backend=backend)
+    out = {}
+    size = psize * num_ranges
+
+    def main(paramv, depv, api):
+        block, ptr = api.db_create(size)
+        ptr[:] = np.frombuffer(np.random.default_rng(7).bytes(size), np.uint8)
+        api.db_release(block)
+        shadow, _ = api.db_create(size)
+        api.db_release(shadow)
+        for i in range(num_ranges):
+            api.db_copy(shadow, i * psize, block, i * psize, psize)
+        out["block"] = block
+        out["shadow"] = shadow
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    shadow = rt.lookup(out["shadow"]).buffer.copy()
+    block = rt.lookup(out["block"]).buffer.copy()
+    return block, shadow, stats
+
+
+def test_copy_batching_numpy_backend():
+    block, shadow, stats = _scatter("numpy")
+    assert np.array_equal(shadow, block)
+    assert stats.bytes_copied == 8 * 1024
+    assert stats.fused_copies == 0
+
+
+def test_copy_batching_pallas_backend_matches():
+    """The fused Pallas kernel path is bit-exact vs the numpy backend and
+    collapses the batch into one launch."""
+    pytest.importorskip("jax")
+    block, shadow, stats = _scatter("pallas")
+    assert np.array_equal(shadow, block)
+    assert stats.bytes_copied == 8 * 1024
+    assert stats.fused_copies == 1
+
+
+def test_copy_completion_events_fire_after_flush():
+    """Completion events of batched copies are satisfied (same virtual
+    time) and downstream tasks observe the copied bytes."""
+    rt = Runtime()
+    seen = {}
+
+    def check(paramv, depv, api):
+        seen["data"] = depv[1].ptr.copy()
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        src, sptr = api.db_create(256)
+        sptr[:] = 3
+        api.db_release(src)
+        dst, _ = api.db_create(256)
+        api.db_release(dst)
+        ev1 = api.db_copy(dst, 0, src, 0, 128)
+        ev2 = api.db_copy(dst, 128, src, 128, 128)
+        latch = api.event_create(EventKind.LATCH, latch_count=2)
+        api.add_dependence(ev1, latch, 0, DbMode.NULL)
+        api.add_dependence(ev2, latch, 0, DbMode.NULL)
+        tmpl = api.edt_template_create(check, 0, 2)
+        t, _ = api.edt_create(tmpl,
+                              depv=[UNINITIALIZED_GUID, UNINITIALIZED_GUID])
+        api.add_dependence(latch, t, 0, DbMode.NULL)
+        api.add_dependence(dst, t, 1, DbMode.RO)
+        seen["dst"] = dst
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert (seen["data"] == 3).all()
+    dst_buf = rt.lookup(seen["dst"]).buffer
+    assert (dst_buf == 3).all()
+
+
+def test_partition_back_not_batched():
+    """DB_COPY_PARTITION_BACK destroys its source synchronously — it must
+    bypass the batch (same observable behavior as the seed runtime)."""
+    from repro.core import (DB_COPY_PARTITION, DB_COPY_PARTITION_BACK,
+                            DB_PROP_NO_ACQUIRE)
+    rt = Runtime()
+    out = {}
+
+    def main(paramv, depv, api):
+        block, ptr = api.db_create(256)
+        ptr[:] = 9
+        api.db_release(block)
+        c, _ = api.db_create(128, props=DB_PROP_NO_ACQUIRE)
+        api.db_copy(c, 0, block, 64, 128, DB_COPY_PARTITION)
+        out["block"], out["chunk"] = block, c
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+
+    def main2(paramv, depv, api):
+        api.db_copy(out["block"], 64, out["chunk"], 0, 128,
+                    DB_COPY_PARTITION_BACK)
+        return NULL_GUID
+
+    spawn_main(rt, main2)
+    rt.run()
+    assert rt.try_lookup(out["chunk"]) is None
+    assert not rt.lookup(out["block"]).partitions
+    assert rt.stats.bytes_zero_copy == 256      # view + aligned write-back
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_copy_then_same_timestamp_destroy(backend):
+    """A db_copy followed by db_destroy of the source in the same task must
+    land the copy before the destruction — batching may not reorder the
+    flush past the MDestroy (seed semantics: copies applied at arrival)."""
+    if backend == "pallas":
+        pytest.importorskip("jax")
+    rt = Runtime(copy_backend=backend)
+    out = {}
+
+    def main(paramv, depv, api):
+        block, ptr = api.db_create(1024)
+        ptr[:] = 5
+        api.db_release(block)
+        shadow, _ = api.db_create(1024)
+        api.db_release(shadow)
+        api.db_copy(shadow, 0, block, 0, 512)
+        api.db_copy(shadow, 512, block, 512, 512)
+        api.db_destroy(block)
+        out["shadow"] = shadow
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert (rt.lookup(out["shadow"]).buffer == 5).all()
+    assert rt.stats.bytes_copied == 1024
+
+
+def test_overlapping_destinations_fall_back_to_sequential():
+    """Same-timestamp copies with overlapping destinations are legal; the
+    pallas backend must fall back to the numpy path's sequential
+    last-writer-wins semantics instead of rejecting the batch."""
+    pytest.importorskip("jax")
+    results = {}
+    for backend in ("numpy", "pallas"):
+        rt = Runtime(copy_backend=backend)
+        out = {}
+
+        def main(paramv, depv, api):
+            block, ptr = api.db_create(1024)
+            ptr[:512] = 1
+            ptr[512:] = 2
+            api.db_release(block)
+            shadow, _ = api.db_create(1024)
+            api.db_release(shadow)
+            api.db_copy(shadow, 0, block, 0, 512)
+            api.db_copy(shadow, 256, block, 512, 512)   # overlaps first dst
+            out["shadow"] = shadow
+            return NULL_GUID
+
+        spawn_main(rt, main)
+        stats = rt.run()
+        results[backend] = rt.lookup(out["shadow"]).buffer.copy()
+        assert stats.fused_copies == 0      # overlap: fused path declined
+    assert np.array_equal(results["numpy"], results["pallas"])
+    assert (results["numpy"][256:768] == 2).all()       # last writer wins
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_same_dst_different_sources_keeps_arrival_order(backend):
+    """Copies from different sources into the same destination range must
+    apply in arrival order — grouping by (src, dst) may not reorder them
+    (seed semantics: the copy issued first lands first)."""
+    if backend == "pallas":
+        pytest.importorskip("jax")
+    rt = Runtime(copy_backend=backend)
+    out = {}
+
+    def main(paramv, depv, api):
+        s1, p1 = api.db_create(256)
+        p1[:] = 1
+        api.db_release(s1)
+        s2, p2 = api.db_create(256)
+        p2[:] = 2
+        api.db_release(s2)
+        d, _ = api.db_create(256)
+        api.db_release(d)
+        api.db_copy(d, 0, s1, 0, 256)
+        api.db_copy(d, 0, s2, 0, 256)
+        api.db_copy(d, 0, s1, 0, 256)   # issued last: s1 must win
+        out["d"] = d
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert (rt.lookup(out["d"]).buffer == 1).all()
+
+
+def test_src_aliasing_dst_is_sequential_on_pallas():
+    """A batched copy whose source is another copy's destination must see
+    the earlier write (read-after-write), not a pre-batch snapshot."""
+    pytest.importorskip("jax")
+    bufs = {}
+    for backend in ("numpy", "pallas"):
+        rt = Runtime(copy_backend=backend)
+        out = {}
+
+        def main(paramv, depv, api):
+            b, ptr = api.db_create(4096)
+            ptr[:] = 0
+            ptr[:128] = 1
+            api.db_release(b)
+            api.db_copy(b, 1024, b, 0, 128)
+            api.db_copy(b, 2048, b, 1024, 128)   # reads copy 1's dst
+            out["b"] = b
+            return NULL_GUID
+
+        spawn_main(rt, main)
+        rt.run()
+        bufs[backend] = rt.lookup(out["b"]).buffer.copy()
+    assert np.array_equal(bufs["numpy"], bufs["pallas"])
+    assert (bufs["numpy"][2048:2176] == 1).all()

@@ -1,0 +1,334 @@
+"""Indexed waiter-wakeup scheduler: FIFO fairness, no starvation, O(1)
+retries per release (observable via ``Stats.waiter_wakeups``), and the
+``run(until=...)`` resume ordering fix."""
+import numpy as np
+import pytest
+
+from repro.core import (DbMode, NULL_GUID, Runtime, UNINITIALIZED_GUID,
+                        spawn_main)
+from repro.core.messages import MSatisfy
+
+
+def _contend(num_waiters, mode=DbMode.RW, duration=1.0):
+    rt = Runtime(num_nodes=1)
+    order = []
+
+    def w(paramv, depv, api):
+        order.append((paramv[0], api.rt.clock))
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(64)
+        api.db_release(db)
+        tmpl = api.edt_template_create(w, 1, 1)
+        for i in range(num_waiters):
+            api.edt_create(tmpl, paramv=[i], depv=[db], dep_modes=[mode],
+                           duration=duration)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    return order, stats
+
+
+def test_contention_fifo_grant_order():
+    """Waiters on one DB are granted in arrival (FIFO) order."""
+    order, stats = _contend(32)
+    assert [i for i, _ in order] == list(range(32))
+    # fully serialized: each RW holder occupies its whole duration
+    assert stats.makespan == 32.0
+
+
+def test_contention_wakeups_linear_not_quadratic():
+    """One release retries O(1) waiters, not the whole queue: the wakeup
+    count stays linear in W where the seed scheduler did W·(W+1)/2."""
+    _, s64 = _contend(64)
+    _, s256 = _contend(256)
+    assert s64.waiter_wakeups <= 4 * 64
+    assert s256.waiter_wakeups <= 4 * 256
+    # and it actually scales linearly between the two sizes
+    assert s256.waiter_wakeups <= 5 * s64.waiter_wakeups
+
+
+def test_virtual_makespan_unchanged_by_scheduler():
+    """The wakeup indexing is a wall-time optimization only: virtual-time
+    makespans match full serialization exactly."""
+    for w in (2, 8, 64):
+        _, stats = _contend(w, duration=10.0)
+        assert stats.makespan == 10.0 * w
+
+
+def test_writer_not_starved_behind_reader_stream():
+    """A writer queued before later readers runs before them (FIFO head
+    priority), and readers behind it are then granted together."""
+    rt = Runtime(num_nodes=1)
+    events = []
+
+    def holder(paramv, depv, api):
+        events.append(("holder", api.rt.clock))
+        return NULL_GUID
+
+    def writer(paramv, depv, api):
+        events.append(("writer", api.rt.clock))
+        return NULL_GUID
+
+    def reader(paramv, depv, api):
+        events.append((paramv[0], api.rt.clock))
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(64)
+        api.db_release(db)
+        h = api.edt_template_create(holder, 0, 1)
+        wt = api.edt_template_create(writer, 0, 1)
+        rd = api.edt_template_create(reader, 1, 1)
+        api.edt_create(h, depv=[db], dep_modes=[DbMode.RW], duration=5)
+        api.edt_create(wt, depv=[db], dep_modes=[DbMode.RW], duration=5)
+        api.edt_create(rd, paramv=["r1"], depv=[db], dep_modes=[DbMode.RO],
+                       duration=5)
+        api.edt_create(rd, paramv=["r2"], depv=[db], dep_modes=[DbMode.RO],
+                       duration=5)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    t = dict(events)
+    assert t["writer"] < t["r1"] and t["writer"] < t["r2"]
+    assert t["r1"] == t["r2"]            # readers share the block
+    assert stats.makespan == t["r1"] + 5
+
+
+def test_wake_on_partition_teardown():
+    """A waiter parked on a partitioned parent wakes when the last
+    partition is destroyed — not on unrelated releases."""
+    rt = Runtime(num_nodes=1)
+    seen = {}
+
+    def child(paramv, depv, api):
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def parent_task(paramv, depv, api):
+        seen["parent_at"] = api.rt.clock
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(64)
+        api.db_release(db)
+        parts = api.db_partition(db, [(0, 32), (32, 32)])
+        ct = api.edt_template_create(child, 0, 1)
+        pt = api.edt_template_create(parent_task, 0, 1)
+        api.edt_create(ct, depv=[parts[0]], dep_modes=[DbMode.EW], duration=3)
+        api.edt_create(ct, depv=[parts[1]], dep_modes=[DbMode.EW], duration=7)
+        api.edt_create(pt, depv=[db], dep_modes=[DbMode.RO], duration=1)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert seen["parent_at"] >= 7        # waited for the slower partition
+
+
+def test_deadlock_check_cached_per_edt():
+    """The §6.2 ancestor walk runs once per EDT even when the task is
+    retried many times from the waiter queue."""
+    rt = Runtime(num_nodes=1)
+    walks = [0]
+    orig = Runtime._check_deadlock
+
+    def counting(self, deps):
+        walks[0] += 1
+        return orig(self, deps)
+
+    rt._check_deadlock = counting.__get__(rt)
+
+    def w(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(64)
+        api.db_release(db)
+        tmpl = api.edt_template_create(w, 0, 1)
+        for _ in range(16):
+            api.edt_create(tmpl, depv=[db], dep_modes=[DbMode.RW], duration=1)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    # one walk per EDT (16 workers + main), regardless of retries
+    assert walks[0] == 17
+
+
+def test_run_until_preserves_same_timestamp_order():
+    """Interrupting run() with ``until`` must not reorder an event against
+    same-timestamp peers when it is re-pushed (the fresh-tick bug)."""
+
+    def build():
+        rt = Runtime(num_nodes=1)
+        fired = []
+
+        def w(paramv, depv, api):
+            fired.append(paramv[0])
+            return NULL_GUID
+
+        def main(paramv, depv, api):
+            tmpl = api.edt_template_create(w, 1, 1)
+            for name in ("first", "second"):
+                t, _ = api.edt_create(tmpl, paramv=[name],
+                                      depv=[UNINITIALIZED_GUID])
+                # hand-deliver both satisfies at the same future timestamp
+                api.rt.send(MSatisfy(target=t, slot=0, db=NULL_GUID),
+                            0, 0, at=5.0)
+            return NULL_GUID
+
+        spawn_main(rt, main)
+        return rt, fired
+
+    rt, fired = build()
+    rt.run()
+    uninterrupted = list(fired)
+    assert uninterrupted == ["first", "second"]
+
+    rt2, fired2 = build()
+    rt2.run(until=3.0)      # pops the t=5 head, must re-push with its tick
+    rt2.run()
+    assert fired2 == uninterrupted
+
+
+def test_ancestor_cache_invalidated_by_late_partitioning():
+    """§6.2: a zero-copy DB_COPY_PARTITION gives dst an ancestor *after*
+    its (empty) ancestor chain may have been cached — the cache must be
+    invalidated so parent+partition in one task still raises."""
+    from repro.core import DB_COPY_PARTITION, DB_PROP_NO_ACQUIRE
+    from repro.core.objects import PartitionDeadlockError
+    rt = Runtime(num_nodes=1)
+
+    shared = {}
+
+    def w(paramv, depv, api):
+        return NULL_GUID
+
+    def copier(paramv, depv, api):
+        # runs after A parked: view gains a parent AFTER its (empty)
+        # ancestor chain was cached by A's deadlock check
+        api.db_copy(shared["view"], 0, shared["parent"], 0, 128,
+                    DB_COPY_PARTITION)
+        # B acquires parent+partition in one task: the §6.2 violation a
+        # stale cached () chain would silently miss
+        api.edt_create(shared["tmpl"], depv=[shared["parent"], shared["view"]],
+                       dep_modes=[DbMode.RO, DbMode.RO], duration=1)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        parent, ptr = api.db_create(256)
+        ptr[:] = 1
+        api.db_release(parent)
+        blocker, _ = api.db_create(64)
+        api.db_release(blocker)
+        gate, _ = api.db_create(64)
+        api.db_release(gate)
+        view, _ = api.db_create(128, props=DB_PROP_NO_ACQUIRE)
+        tmpl1 = api.edt_template_create(w, 0, 1)
+        tmpl = api.edt_template_create(w, 0, 2)
+        tmplc = api.edt_template_create(copier, 0, 1)
+        shared.update(parent=parent, view=view, tmpl=tmpl)
+        # L1 holds blocker RW until t=10; A's _try_grant primes the
+        # ancestor cache for view (empty chain) and parks on blocker —
+        # without ever materializing view's buffer.  L2 holds gate until
+        # t=5, so the copier runs at t=5: after A's check, before A wakes.
+        api.edt_create(tmpl1, depv=[blocker],
+                       dep_modes=[DbMode.RW], duration=10)
+        api.edt_create(tmpl1, depv=[gate],
+                       dep_modes=[DbMode.RW], duration=5)
+        api.edt_create(tmpl, depv=[view, blocker],
+                       dep_modes=[DbMode.RO, DbMode.RO], duration=1)
+        api.edt_create(tmplc, depv=[gate], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    with pytest.raises(PartitionDeadlockError):
+        rt.run()
+
+
+def test_reentrant_wake_does_not_strand_waiters():
+    """A granted waiter's body can re-enter _wake_waiters for the same DB
+    (explicit db_release + db_partition mid-body).  The outer wake loop
+    must not keep working on a detached deque nor delete a queue that was
+    re-created underneath it — that would strand the re-parked waiter
+    forever (silent lost task)."""
+    from repro.core import DB_COPY_PARTITION_BACK
+    rt = Runtime(num_nodes=1)
+    ran = []
+    shared = {}
+
+    def h(paramv, depv, api):
+        return NULL_GUID
+
+    def e1(paramv, depv, api):
+        # release X: re-enters _wake_waiters(X) on the deque the outer
+        # loop is iterating (and pops its dict entry)
+        api.db_release(shared["x"])
+        # partition X: makes it unavailable in any mode (§6.2)
+        part = api.db_partition(shared["x"], [(0, 32)])[0]
+        # release Y: wakes E4, which re-parks on X in a *new* deque
+        api.db_release(shared["y"])
+        # destroying the partition later re-enables X and must wake E4
+        api.db_destroy(part)
+        ran.append("e1")
+        return NULL_GUID
+
+    def e4(paramv, depv, api):
+        ran.append("e4")
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        x, _ = api.db_create(64)
+        api.db_release(x)
+        y, _ = api.db_create(64)
+        api.db_release(y)
+        shared["x"], shared["y"] = x, y
+        tmpl_h = api.edt_template_create(h, 0, 2)
+        tmpl_1 = api.edt_template_create(e1, 0, 2)
+        tmpl_4 = api.edt_template_create(e4, 0, 2)
+        api.edt_create(tmpl_h, depv=[x, y],
+                       dep_modes=[DbMode.RW, DbMode.RW], duration=5)
+        api.edt_create(tmpl_1, depv=[x, y],
+                       dep_modes=[DbMode.RW, DbMode.RW], duration=1)
+        api.edt_create(tmpl_4, depv=[y, x],
+                       dep_modes=[DbMode.RW, DbMode.RW], duration=1)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert ran == ["e1", "e4"]          # E4 must eventually execute
+    assert stats.tasks_executed == 4    # main + H + E1 + E4
+    assert not rt._db_waiters           # nothing left parked
+
+
+def test_batched_copy_not_reordered_past_partition_back():
+    """A batchable plain copy issued BEFORE a non-batchable
+    DB_COPY_PARTITION_BACK targeting overlapping bytes must land first
+    (arrival order), not be deferred past it by the flush event."""
+    from repro.core import DB_COPY_PARTITION_BACK
+    rt = Runtime()
+    out = {}
+
+    def main(paramv, depv, api):
+        d, dptr = api.db_create(128)
+        dptr[:] = 0
+        api.db_release(d)
+        s, sptr = api.db_create(128)
+        sptr[:] = 65
+        api.db_release(s)
+        q, qptr = api.db_create(128)     # materialized chunk, own buffer
+        qptr[:] = 66
+        api.db_release(q)
+        api.db_copy(d, 0, s, 0, 128)                       # arrives 1st
+        api.db_copy(d, 0, q, 0, 128,
+                    DB_COPY_PARTITION_BACK)                # arrives 2nd
+        out["d"] = d
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    # last writer (PARTITION_BACK, byte 66) must win
+    assert (rt.lookup(out["d"]).buffer == 66).all()
