@@ -1,0 +1,78 @@
+"""Fail-soft perf-trajectory diff: fresh BENCH_*.json vs committed snapshots.
+
+Compares every ``makespan*`` key (deterministic virtual time — noise-free,
+so a tight threshold is meaningful) and, more loosely, ``*_ms`` wall-time
+keys.  A regression beyond the threshold emits a GitHub Actions warning
+annotation (``::warning::``) and is reported in the exit summary, but the
+exit code stays 0 — perf drift warns, it does not block (ROADMAP "perf
+trajectory").
+
+Usage:
+  python scripts/bench_diff.py --new . --old benchmarks/snapshots
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+MAKESPAN_THRESHOLD = 0.20      # virtual time: >20% regression warns
+WALL_THRESHOLD = 1.00          # wall time: noisy CI runners, warn at 2x
+
+
+def compare(old: dict, new: dict, name: str) -> list[str]:
+    warnings = []
+    for key, ov in sorted(old.items()):
+        nv = new.get(key)
+        if not isinstance(ov, (int, float)) or not isinstance(nv, (int, float)):
+            continue
+        if ov <= 0 or nv <= 0:
+            continue
+        if key.startswith("makespan"):
+            threshold = MAKESPAN_THRESHOLD
+        elif key.endswith("_ms") or key.endswith("_s"):
+            threshold = WALL_THRESHOLD
+        else:
+            continue               # counters: tracked, not thresholded
+        ratio = nv / ov
+        if ratio > 1.0 + threshold:
+            warnings.append(
+                f"{name}:{key} regressed {ratio:.2f}x "
+                f"({ov:.6g} -> {nv:.6g}, threshold +{threshold:.0%})")
+    return warnings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--new", default=".", help="dir with fresh BENCH_*.json")
+    ap.add_argument("--old", default="benchmarks/snapshots",
+                    help="dir with committed snapshots")
+    args = ap.parse_args()
+
+    warnings = []
+    compared = 0
+    for old_path in sorted(glob.glob(os.path.join(args.old, "BENCH_*.json"))):
+        name = os.path.basename(old_path)
+        new_path = os.path.join(args.new, name)
+        if not os.path.exists(new_path):
+            print(f"::warning::bench_diff: {name} missing from fresh run")
+            continue
+        with open(old_path) as f:
+            old = json.load(f)
+        with open(new_path) as f:
+            new = json.load(f)
+        compared += 1
+        warnings.extend(compare(old, new, name))
+
+    print(f"bench_diff: compared {compared} snapshot(s), "
+          f"{len(warnings)} regression(s)")
+    for w in warnings:
+        print(f"::warning::{w}")
+        print(f"  {w}", file=sys.stderr)
+    # fail-soft: warnings annotate the run; the job stays green
+
+
+if __name__ == "__main__":
+    main()

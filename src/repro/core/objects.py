@@ -98,6 +98,10 @@ class EdtObj:
     deadlock_epoch: int = -1
     # the blocking DB guid whose waiter queue this EDT currently sits in
     waiting_on: Optional[Guid] = None
+    # RO waiters granted past this EDT while it was a blocked FIFO head;
+    # capped at Runtime.reader_batch_bound over the EDT's whole wait (EDTs
+    # run once, so the cap needs no reset) — bounded barging, no starvation
+    barged_past: int = 0
 
 
 @dataclasses.dataclass

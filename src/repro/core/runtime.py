@@ -111,6 +111,7 @@ class Stats:
     creator_calls: int = 0
     tasks_executed: int = 0
     waiter_wakeups: int = 0
+    reader_batch_grants: int = 0
     bytes_copied: int = 0
     bytes_zero_copy: int = 0
     file_bytes_read: int = 0
@@ -152,6 +153,7 @@ class Runtime:
         jitter: float = 0.0,
         trace: bool = False,
         copy_backend: str = "numpy",
+        reader_batch_bound: int = 8,
     ):
         self.num_nodes = num_nodes
         self.net_latency = float(net_latency)
@@ -160,6 +162,9 @@ class Runtime:
         self.rng = random.Random(seed)
         self.trace = trace
         self.copy_backend = copy_backend  # "numpy" | "pallas" (§6.3 fallback)
+        # max RO waiters granted past a blocked FIFO head per wake (bounded
+        # barging: 0 disables; keeps writers from starving behind readers)
+        self.reader_batch_bound = reader_batch_bound
         self.nodes = [_Node(i) for i in range(num_nodes)]
         self.stats = Stats()
         self.clock = 0.0
@@ -559,15 +564,80 @@ class Runtime:
             self.stats.waiter_wakeups += 1
             if self._try_grant(edt) == db_guid:
                 # re-blocked: _enqueue_waiter appended it; restore its FIFO
-                # head position, then stop retrying the rest
+                # head position, then stop retrying the rest — except for a
+                # bounded batch of RO waiters that can share the block now
                 queue = self._db_waiters.get(db_guid)
                 if queue and queue[-1] is edt:
                     queue.pop()
                     queue.appendleft(edt)
+                self._reader_batch_grant(db_guid)
                 break
         queue = self._db_waiters.get(db_guid)
         if queue is not None and not queue:
             self._db_waiters.pop(db_guid, None)
+
+    def _waits_ro_only(self, edt: EdtObj, db_guid: Guid) -> bool:
+        modes = [m for s, m in zip(edt.slots, edt.modes)
+                 if isinstance(s, Guid) and s == db_guid]
+        return bool(modes) and all(m in (DbMode.RO, DbMode.CONST)
+                                   for m in modes)
+
+    def _reader_batch_grant(self, db_guid: Guid) -> None:
+        """Bounded reader barging (ROADMAP "waiter-queue mode awareness").
+
+        The FIFO head just re-blocked — typically a writer waiting out the
+        current readers.  If the DB is readable right now, RO waiters
+        queued *behind* that head could share it without delaying the head
+        at all (readers don't conflict with readers).  The cap is per
+        blocked *head*, not per wake: ``head.barged_past`` accumulates
+        across wakes, so at most ``reader_batch_bound`` readers ever
+        overtake one waiting task no matter how sustained the reader
+        stream is — bounded barging, no starvation.  Each grant counts in
+        ``Stats.reader_batch_grants``.
+        """
+        bound = self.reader_batch_bound
+        if bound <= 0:
+            return
+        db = self.try_lookup(db_guid)
+        if db is None or db.partitions or not db.available(DbMode.RO):
+            return
+        queue = self._db_waiters.get(db_guid)
+        if queue is None or len(queue) < 2:
+            return
+        head = queue[0]
+        if head.barged_past >= bound:
+            return
+        granted = 0
+        bound = bound - head.barged_past
+        # snapshot a bounded window: grants run task bodies synchronously,
+        # which can re-enter the wake machinery and mutate the live deque
+        window = list(queue)[1: 1 + 8 * bound]
+        for cand in window:
+            if granted >= bound:
+                break
+            if cand.waiting_on != db_guid or cand.state != "ready" \
+                    or not self._waits_ro_only(cand, db_guid):
+                continue
+            live = self._db_waiters.get(db_guid)
+            if live is None:
+                break
+            try:
+                live.remove(cand)
+            except ValueError:
+                continue
+            cand.waiting_on = None
+            self.stats.waiter_wakeups += 1
+            blocked_on = self._try_grant(cand)
+            if blocked_on is None:
+                granted += 1
+                head.barged_past += 1
+                self.stats.reader_batch_grants += 1
+            elif blocked_on == db_guid:
+                break          # a reentrant wake changed the DB's state
+            # else: parked on a different DB; keep scanning
+            db = self.try_lookup(db_guid)
+            if db is None or db.partitions or not db.available(DbMode.RO):
+                break
 
     def _materialize(self, db: DbObj) -> np.ndarray:
         if db.buffer is None:

@@ -1,0 +1,257 @@
+"""Mesh-strategy dispatch for attention compute.
+
+One place decides how attention parallelizes, so the model blocks never
+mention the mesh:
+
+* **head-parallel** — when the (kv-)head count divides the "model" axis,
+  heads shard and every device runs the plain local kernel on its heads;
+  no collective at all (attention is independent per head).
+* **context/sequence-parallel** — otherwise, when the sequence divides the
+  "model" axis: q shards over sequence, k/v stay whole, and each device
+  computes its q stripe against the full context (``q_offset`` keeps the
+  causal mask globally correct).  Used for training/prefill.
+* **lse-combine flash decode** — one-token decode against a cache whose
+  *sequence* dim shards over "model": every device computes a partial
+  softmax over its §6 stripe of the cache and the partials combine with a
+  global max + psum (the log-sum-exp trick), two scalarish collectives.
+* **single device** — no mesh (or ``pure_dp``): the existing kernels.
+  Training paths use the differentiable jnp flash twin
+  (``flash_attention_jnp``); the decode hot path routes to the Pallas
+  kernels (``repro.kernels``) on a TPU backend.
+
+The §6 reading: a decode cache is one data block; the sequence stripes the
+lse-combine path walks are exactly the disjoint EW partitions
+``partition_tree_of`` emits for the cache's ``kv_seq`` sharding.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import (decode_attention, flash_attention_jnp,
+                                    full_attention)
+from .sharding import ShardCtx, current_ctx, shard_map
+
+NEG_INF = -1e30
+
+
+def _blocks(cfg) -> Tuple[int, int]:
+    return (getattr(cfg, "attn_block_q", 512) or 512,
+            getattr(cfg, "attn_block_k", 1024) or 1024)
+
+
+def _attn_local(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
+                block_q: int, block_k: int, q_offset=0) -> jax.Array:
+    """Single-shard causal attention: flash twin for long sequences (O(S)
+    memory + custom O(S) backward), dense reference for short ones."""
+    sq, sk = q.shape[1], k.shape[1]
+    if sq > max(2 * block_q, 2048) and sq % block_q == 0 \
+            and sk % block_k == 0:
+        return flash_attention_jnp(
+            q, k, v, jnp.asarray(q_offset).astype(jnp.float32),
+            True, window, block_q, block_k)
+    return full_attention(q, k, v, causal=True, window=window,
+                          q_offset=q_offset)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, cfg=None,
+                     window: int = 0) -> jax.Array:
+    """Causal (optionally sliding-window) attention, mesh-dispatched.
+
+    q: (B, S, H, hd); k, v: (B, S, KH, hd) → (B, S, H, hd_v).
+    """
+    ctx = current_ctx()
+    b, s, h, _ = q.shape
+    kh = k.shape[2]
+    m = ctx.model_size
+    bq, bk = _blocks(cfg)
+
+    if not ctx.active or ctx.pure_dp or m <= 1:
+        return _attn_local(q, k, v, window=window, block_q=bq, block_k=bk)
+
+    dp = ctx.resolve("dp", b)
+    if h % m == 0 and kh % m == 0:
+        # head-parallel: no collective, local kernel per head shard
+        spec = P(dp, None, "model", None)
+
+        def inner(ql, kl, vl):
+            return _attn_local(ql, kl, vl, window=window,
+                               block_q=bq, block_k=bk)
+
+        return shard_map(inner, ctx.mesh, in_specs=(spec, spec, spec),
+                         out_specs=spec)(q, k, v)
+
+    if s % m == 0:
+        # context-parallel: q stripes over "model", k/v whole; q_offset
+        # keeps each stripe's causal mask globally positioned
+        chunk = s // m
+        qspec = P(dp, "model", None, None)
+        kvspec = P(dp, None, None, None)
+
+        def inner(ql, kl, vl):
+            off = jax.lax.axis_index("model") * chunk
+            return _attn_local(ql, kl, vl, window=window, block_q=bq,
+                               block_k=bk, q_offset=off)
+
+        return shard_map(inner, ctx.mesh, in_specs=(qspec, kvspec, kvspec),
+                         out_specs=qspec)(q, k, v)
+
+    return _attn_local(q, k, v, window=window, block_q=bq, block_k=bk)
+
+
+# ------------------------------------------------------------------- decode
+
+def _decode_local(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                  valid: jax.Array, window: int) -> jax.Array:
+    """One-token attention against head-major caches on one shard.
+
+    q: (B, 1, H, hd); caches: (B, KH, S, hd); valid: scalar int32 count of
+    valid cache entries.  Routes to the Pallas flash-decode kernel on a
+    TPU backend (decode is never differentiated), jnp oracle elsewhere.
+    """
+    b, _, h, hd = q.shape
+    kh = k_cache.shape[1]
+    g = h // kh
+    smax = k_cache.shape[2]
+    if jax.default_backend() == "tpu" and smax % 128 == 0:
+        from repro.kernels.flash_decode import flash_decode
+        qg = q[:, 0].reshape(b, kh, g, hd)
+        out = flash_decode(qg, k_cache, v_cache, valid, window=window)
+        return out.reshape(b, 1, h, v_cache.shape[-1])
+    kt = jnp.transpose(k_cache, (0, 2, 1, 3))
+    vt = jnp.transpose(v_cache, (0, 2, 1, 3))
+    return decode_attention(q, kt, vt, cur_len=valid, window=window)
+
+
+def decode_update_and_attend(q: jax.Array, k_new: jax.Array,
+                             v_new: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, cur_len, *, cfg=None,
+                             window: int = 0):
+    """Insert the new token at ``cur_len`` and attend over ``cur_len + 1``.
+
+    q, k_new, v_new: (B, 1, H|KH, hd); caches head-major (B, KH, S, hd);
+    cur_len: scalar int32 tokens already cached.  Returns
+    (out (B, 1, H, hd_v), k_cache', v_cache').
+    """
+    ctx = current_ctx()
+    b, _, h, hd = q.shape
+    kh, smax = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    m = ctx.model_size
+    cur = jnp.asarray(cur_len, jnp.int32)
+
+    kn = jnp.transpose(k_new, (0, 2, 1, 3)).astype(k_cache.dtype)
+    vn = jnp.transpose(v_new, (0, 2, 1, 3)).astype(v_cache.dtype)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, kn, (0, 0, cur, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, vn, (0, 0, cur, 0))
+
+    if not ctx.active or ctx.pure_dp or m <= 1:
+        out = _decode_local(q, k_cache, v_cache, cur + 1, window)
+        return out, k_cache, v_cache
+
+    dp = ctx.resolve("dp", b)
+    if h % m == 0 and kh % m == 0:
+        qspec = P(dp, None, "model", None)
+        cspec = P(dp, "model", None, None)
+
+        def inner(c, ql, kcl, vcl):
+            return _decode_local(ql, kcl, vcl, c + 1, window)
+
+        out = shard_map(inner, ctx.mesh,
+                        in_specs=(P(), qspec, cspec, cspec),
+                        out_specs=qspec)(cur, q, k_cache, v_cache)
+        return out, k_cache, v_cache
+
+    if smax % m == 0:
+        # lse-combine: each device scans its §6 stripe of the cache,
+        # partial softmaxes merge through a global max + psum
+        chunk = smax // m
+        scale = 1.0 / np.sqrt(hd)
+        qspec = P(dp, None, None, None)
+        cspec = P(dp, None, "model", None)
+
+        def inner(c, ql, kcl, vcl):
+            bl = ql.shape[0]
+            r = jax.lax.axis_index("model")
+            pos = r * chunk + jnp.arange(chunk)
+            qg = ql[:, 0].reshape(bl, kh, g, hd).astype(jnp.float32)
+            s = jnp.einsum("bkgh,bksh->bkgs", qg,
+                           kcl.astype(jnp.float32)) * scale
+            valid = pos < c + 1
+            if window > 0:
+                valid &= pos >= jnp.maximum(c + 1 - window, 0)
+            s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+            m_loc = jnp.max(s, axis=-1)
+            m_all = jax.lax.pmax(m_loc, "model")
+            p = jnp.exp(s - m_all[..., None])
+            p = jnp.where(valid[None, None, None, :], p, 0.0)
+            num = jnp.einsum("bkgs,bksh->bkgh", p,
+                             vcl.astype(jnp.float32))
+            num = jax.lax.psum(num, "model")
+            den = jax.lax.psum(jnp.sum(p, axis=-1), "model")
+            out = num / jnp.maximum(den, 1e-37)[..., None]
+            return out.reshape(bl, 1, h, -1).astype(ql.dtype)
+
+        out = shard_map(inner, ctx.mesh,
+                        in_specs=(P(), qspec, cspec, cspec),
+                        out_specs=qspec)(cur, q, k_cache, v_cache)
+        return out, k_cache, v_cache
+
+    out = _decode_local(q, k_cache, v_cache, cur + 1, window)
+    return out, k_cache, v_cache
+
+
+# ---------------------------------------------------------------- MLA decode
+
+def mla_decode_attend(q_latent: jax.Array, q_rope: jax.Array,
+                      c_new: jax.Array, kr_new: jax.Array,
+                      c_kv: jax.Array, k_rope: jax.Array, cur_len, *,
+                      scale: float):
+    """Absorbed-matrix MLA decode in the compressed latent space.
+
+    q_latent: (B, 1, H, rkv); q_rope: (B, 1, H, dr); new latents
+    c_new (B, 1, rkv) / kr_new (B, 1, dr); caches c_kv (B, S, rkv) /
+    k_rope (B, S, dr).  Returns (out_latent (B, 1, H, rkv), c_kv',
+    k_rope').  Heads shard over "model" when they divide it (the caches
+    are head-shared latents, so head-parallel needs no collective);
+    otherwise the compute is latent-rank-bound and runs replicated.
+    """
+    ctx = current_ctx()
+    b, _, h, _ = q_latent.shape
+    m = ctx.model_size
+    cur = jnp.asarray(cur_len, jnp.int32)
+
+    c_kv = jax.lax.dynamic_update_slice(
+        c_kv, c_new.astype(c_kv.dtype), (0, cur, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        k_rope, kr_new.astype(k_rope.dtype), (0, cur, 0))
+
+    def attend(ql, qr, ckv, kr, c):
+        smax = ckv.shape[1]
+        s = (jnp.einsum("bshr,btr->bhst", ql, ckv)
+             + jnp.einsum("bshk,btk->bhst", qr, kr)).astype(jnp.float32)
+        s = s * scale
+        valid = jnp.arange(smax) < c + 1
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(ql.dtype)
+        return jnp.einsum("bhst,btr->bshr", probs, ckv)
+
+    if ctx.active and not ctx.pure_dp and m > 1 and h % m == 0:
+        dp = ctx.resolve("dp", b)
+        qspec = P(dp, None, "model", None)
+        cspec = P(dp, None, None)
+
+        def inner(ql, qr, ckv, kr, c):
+            return attend(ql, qr, ckv, kr, c)
+
+        out = shard_map(inner, ctx.mesh,
+                        in_specs=(qspec, qspec, cspec, cspec, P()),
+                        out_specs=qspec)(q_latent, q_rope, c_kv, k_rope, cur)
+        return out, c_kv, k_rope
+
+    out = attend(q_latent, q_rope, c_kv, k_rope, cur)
+    return out, c_kv, k_rope

@@ -121,6 +121,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):       # jax < 0.5 returns a list
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         # trip-count-aware parse (cost_analysis counts while bodies once)
         from repro.launch import hlo_cost

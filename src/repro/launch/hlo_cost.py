@@ -334,7 +334,14 @@ def analyze(text: str, entry_name: Optional[str] = None) -> HloCost:
                 if fm:
                     f = fm.group(1)
                     mult[f] = mult.get(f, 0.0) + cm
-                    flops_only[f] = True  # fusion internals: flops yes, bytes no
+                    if ins.op == "fusion":
+                        # fusion internals: flops yes, bytes no (registers)
+                        flops_only[f] = True
+                    else:
+                        # called computations (e.g. the CPU backend's
+                        # parallel-task wrappers) materialize internally:
+                        # bytes count unless the caller was flops-only
+                        flops_only[f] = conly and flops_only.get(f, True)
                     if f not in order:
                         order.append(f)
             elif ins.op == "conditional":

@@ -241,7 +241,7 @@ def moe_ffn(params: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
     over-model) local tokens, and one psum over "model" combines — no
     all-to-all, no one-hot dispatch einsum.
     """
-    from repro.dist.sharding import current_ctx
+    from repro.dist.sharding import current_ctx, shard_map
     from jax.sharding import PartitionSpec as P
 
     ctx = current_ctx()
@@ -287,12 +287,12 @@ def moe_ffn(params: Params, x: jax.Array, cfg) -> Tuple[jax.Array, jax.Array]:
             return y.reshape(bl, sl, d)
 
         xspec = P(dp_b, None, None)
-        fn = jax.shard_map(
-            inner, mesh=ctx.mesh,
+        fn = shard_map(
+            inner, ctx.mesh,
             in_specs=(xspec, xspec, xspec,
                       P("model", fs, None), P("model", fs, None),
                       P("model", None, fs)),
-            out_specs=xspec, check_vma=False)
+            out_specs=xspec, check=False)
         y = fn(x, gates_b, idx_b.astype(jnp.int32),
                params["w_gate"], params["w_up"], params["w_down"])
 

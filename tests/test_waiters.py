@@ -98,6 +98,73 @@ def test_writer_not_starved_behind_reader_stream():
     assert stats.makespan == t["r1"] + 5
 
 
+def _barge_setup(num_readers, bound, long_hold=10.0):
+    """W0 holds RW; behind it queue: R_long (RO), Writer (RW), R1..Rn (RO).
+    When W0 releases, R_long is granted, the Writer re-blocks on it, and
+    the readers behind the Writer are candidates for batch granting."""
+    rt = Runtime(num_nodes=1, reader_batch_bound=bound)
+    t = {}
+
+    def task(paramv, depv, api):
+        t[paramv[0]] = api.rt.clock
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(64)
+        api.db_release(db)
+        tmpl = api.edt_template_create(task, 1, 1)
+        api.edt_create(tmpl, paramv=["w0"], depv=[db],
+                       dep_modes=[DbMode.RW], duration=3)
+        api.edt_create(tmpl, paramv=["r_long"], depv=[db],
+                       dep_modes=[DbMode.RO], duration=long_hold)
+        api.edt_create(tmpl, paramv=["writer"], depv=[db],
+                       dep_modes=[DbMode.RW], duration=5)
+        for i in range(num_readers):
+            api.edt_create(tmpl, paramv=[f"r{i}"], depv=[db],
+                           dep_modes=[DbMode.RO], duration=1)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    return t, stats
+
+
+def test_reader_batch_grant_behind_blocked_writer():
+    """RO waiters queued behind a blocked writer share the block in the
+    same wake batch instead of serializing after the writer."""
+    t, stats = _barge_setup(num_readers=4, bound=8)
+    # readers barged at the wake that re-blocked the writer (t=3), and the
+    # writer still ran as soon as the long reader released
+    for i in range(4):
+        assert t[f"r{i}"] == 3.0, t
+    assert t["writer"] == 3.0 + 10.0
+    assert stats.reader_batch_grants == 4
+    assert stats.makespan == 3.0 + 10.0 + 5.0
+
+
+def test_reader_batch_grant_bound_is_cumulative_per_head():
+    """The cap is per blocked head across its whole wait, not per wake:
+    at bound=2 exactly two readers ever overtake the writer — the rest
+    stay FIFO behind it (no cascade, no starvation under a backlog)."""
+    t, stats = _barge_setup(num_readers=6, bound=2)
+    starts = sorted(t[f"r{i}"] for i in range(6))
+    # 2 barge at the t=3 wake; their releases do NOT re-open the scan for
+    # this head (barged_past == bound); the other 4 follow the writer
+    assert starts == [3.0, 3.0, 18.0, 18.0, 18.0, 18.0], t
+    assert stats.reader_batch_grants == 2
+    assert t["writer"] == 13.0      # still exactly when r_long released
+
+
+def test_reader_batch_grant_disabled_at_zero_bound():
+    """bound=0 restores the strict-FIFO seed behavior: readers behind the
+    blocked writer wait for it."""
+    t, stats = _barge_setup(num_readers=4, bound=0)
+    assert stats.reader_batch_grants == 0
+    assert t["writer"] == 13.0
+    for i in range(4):
+        assert t[f"r{i}"] == 18.0   # after the writer, strict FIFO
+
+
 def test_wake_on_partition_teardown():
     """A waiter parked on a partitioned parent wakes when the last
     partition is destroyed — not on unrelated releases."""
