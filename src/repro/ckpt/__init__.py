@@ -1,1 +1,2 @@
-from .checkpoint import save, restore, async_save, latest_step, CkptStats
+from .checkpoint import (CkptStats, async_save, io_cost, latest_step,
+                         restore, save)

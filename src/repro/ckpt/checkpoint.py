@@ -1,22 +1,38 @@
-"""Chunked sharded checkpointing on the paper's §5 file-mapped data blocks.
+"""Chunked + §6-sharded checkpointing on the paper's §5 file-mapped blocks.
 
 Layout of a checkpoint at ``<dir>/step_<N>/``:
   leaf_<i>.bin     one file per pytree leaf
-  manifest.json    tree paths, shapes, dtypes, chunk tables, content hashes
+  manifest.json    tree paths, shapes, dtypes, chunk/range tables, hashes
 
-Properties:
-* **Chunked** — every leaf is written as disjoint (offset, size) chunks by
-  parallel writer EDTs acquiring their chunk data blocks in EW mode;
-  non-overlap is *enforced by the runtime* (§5 ``ocrFileGetChunk``), so a
-  buggy writer cannot corrupt a neighbour's range.
+Two write paths share one manifest format:
+
+* **Chunked (host leaves)** — a leaf without a device sharding is written
+  as fixed-size disjoint chunks by parallel writer EDTs acquiring their
+  chunk data blocks in EW mode; non-overlap is *enforced by the runtime*
+  (§5 ``ocrFileGetChunk``), so a buggy writer cannot corrupt a neighbour.
+* **Sharded (§6 ranges)** — a leaf carrying a ``NamedSharding`` is written
+  as exactly the disjoint §6 byte ranges
+  :func:`repro.dist.sharding.device_ranges_of` assigns to each device:
+  one writer EDT per ``(node, offset, size)`` range, acquiring a §6
+  *partition* of the node's file-mapped chunk in EW mode.  Bytes come
+  from each device's own shard — **no host-side full-leaf gather**
+  (``CkptStats.host_gathers`` stays 0), and adjacent ranges destroyed
+  together coalesce into one IO-queue write-back op.
+
+Shared properties:
 * **Dirty-only** — when the previous checkpoint's manifest is supplied,
-  chunks whose content hash is unchanged are skipped (§5: the runtime only
-  writes back chunks that were actually modified).
+  chunks/ranges whose content hash is unchanged are skipped (§5: the
+  runtime only writes back chunks that were actually modified).  A
+  missing/corrupt previous manifest only disables the skip (warning),
+  it never poisons the save.
 * **Committed** — ``manifest.json`` is written last via atomic rename; a
-  crash mid-save leaves the previous checkpoint intact (``latest_step``
-  only counts manifests).
-* **Elastic** — restore reassembles global arrays from chunk tables
-  regardless of the writer count, so a run may resume on a different mesh.
+  crash mid-save (``crash_at``, fail-stop, or a real crash) leaves the
+  previous checkpoint intact (``latest_step`` only counts manifests and
+  ``step_*.tmp`` directories are ignored).
+* **Elastic / reshard-on-restore** — restore reassembles global arrays
+  from the range tables regardless of writer count or mesh shape, so a
+  run saved on an 8-device mesh can resume on 2, 1, or a pure-dp mesh;
+  pass ``shardings=`` to place the restored leaves directly.
 """
 from __future__ import annotations
 
@@ -24,8 +40,8 @@ import dataclasses
 import hashlib
 import json
 import os
-import threading
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -38,19 +54,29 @@ class CkptStats:
     chunks_written: int = 0
     chunks_skipped: int = 0
     bytes_written: int = 0
+    # host-side full-leaf gathers of device-sharded arrays (the sharded
+    # §6 path never performs one; the acceptance gate asserts 0)
+    host_gathers: int = 0
+    # False when the save was halted (crash_at) before the manifest commit
+    committed: bool = True
+    # §5 IO-queue counters of the save's runtime (virtual time)
+    io_write_ops: int = 0
+    io_coalesced_writes: int = 0
+    makespan: float = 0.0
 
 
-def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, np.ndarray]]:
-    out: List[Tuple[str, np.ndarray]] = []
+def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
+    """Leaves in sorted key-path order — *without* materializing them."""
+    out: List[Tuple[str, Any]] = []
     if isinstance(tree, dict):
         for k in sorted(tree):
             out.extend(_flatten(tree[k], f"{prefix}/{k}" if prefix else str(k)))
     else:
-        out.append((prefix, np.asarray(tree)))
+        out.append((prefix, tree))
     return out
 
 
-def _unflatten(items: Dict[str, np.ndarray]) -> Any:
+def _unflatten(items: Dict[str, Any]) -> Any:
     root: Dict[str, Any] = {}
     for path, val in items.items():
         keys = path.split("/")
@@ -76,103 +102,277 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and \
+        if name.startswith("step_") and not name.endswith(".tmp") and \
                 os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
             steps.append(int(name.split("_")[1]))
     return max(steps) if steps else None
 
 
+def _to_host(leaf: Any, stats: CkptStats) -> np.ndarray:
+    """Materialize one full leaf on host, counting real device gathers."""
+    shards = getattr(leaf, "addressable_shards", None)
+    if shards is not None and len(shards) > 1:
+        stats.host_gathers += 1
+    return np.asarray(leaf)
+
+
+def _load_prev_manifest(ckpt_dir: str) -> Tuple[Optional[str], Dict[str, Any]]:
+    """Previous manifest for dirty-range skipping — fail-soft.
+
+    A crashed or corrupt previous save (missing/garbled ``manifest.json``)
+    must not poison later saves: dirty tracking is skipped with a warning
+    and the save proceeds as a full write.
+    """
+    prev = latest_step(ckpt_dir)
+    if prev is None:
+        return None, {}
+    prev_dir = os.path.join(ckpt_dir, f"step_{prev}")
+    try:
+        with open(os.path.join(prev_dir, "manifest.json")) as f:
+            pm = json.load(f)
+        prev_leaves = {l["path"]: l for l in pm["leaves"]}
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        warnings.warn(
+            f"checkpoint: previous manifest at {prev_dir} is unreadable "
+            f"({type(e).__name__}: {e}); dirty-range skipping disabled "
+            f"for this save")
+        return None, {}
+    return prev_dir, prev_leaves
+
+
+# ------------------------------------------------------------ §6 range plans
+
+@dataclasses.dataclass
+class _RangePlan:
+    """Write plan for one leaf: disjoint ranges, each owned by one node."""
+
+    table: List[Tuple[int, int, int]]        # (node, offset, size)
+    payloads: Dict[int, bytes]               # offset -> bytes to write
+    sharded: bool
+
+
+def _plan_sharded(leaf: Any, num_writers: int) -> Optional[_RangePlan]:
+    """§6 plan for a ``NamedSharding``-carrying array; None for host leaves.
+
+    Every distinct byte range is owned by the node of the *first* device
+    holding it (replicas skip); payload bytes come from that device's own
+    shard, never from a full-leaf gather.
+    """
+    sharding = getattr(leaf, "sharding", None)
+    shards = getattr(leaf, "addressable_shards", None)
+    if sharding is None or shards is None or not hasattr(sharding, "mesh"):
+        return None
+    from repro.dist.sharding import device_ranges_of
+    per_dev = device_ranges_of(leaf.shape, leaf.dtype.itemsize, sharding)
+    by_device = {s.device: s for s in shards}
+    seen: set = set()
+    table: List[Tuple[int, int, int]] = []
+    payloads: Dict[int, bytes] = {}
+    for dev_idx, (dev, ranges) in enumerate(per_dev):
+        fresh = [(i, r) for i, r in enumerate(ranges) if r not in seen]
+        if not fresh:
+            continue                      # pure replica of earlier devices
+        shard = by_device.get(dev)
+        if shard is None:                 # non-addressable device (multihost)
+            continue
+        raw = np.asarray(shard.data).tobytes()
+        node = dev_idx % num_writers
+        for i, (off, size) in fresh:
+            seen.add((off, size))
+            # a shard's bytes split into equal run-sized pieces matching
+            # its ranges in order (device_ranges_of emission order)
+            payloads[off] = raw[i * size: (i + 1) * size]
+            table.append((node, off, size))
+    table.sort(key=lambda t: t[1])
+    return _RangePlan(table=table, payloads=payloads, sharded=True)
+
+
+def _plan_chunked(arr: np.ndarray, chunk_bytes: int,
+                  num_writers: int) -> _RangePlan:
+    """Fixed-size chunk plan for a host leaf.
+
+    Chunks are assigned to writer nodes in contiguous blocks (not
+    round-robin) so each node's dirty ranges are adjacent and its
+    write-backs coalesce into one IO-queue op per node.
+    """
+    raw = arr.tobytes()
+    chunks = [(off, size)
+              for off, size in _chunk_table(arr.nbytes, chunk_bytes)
+              if size > 0]
+    table = []
+    payloads = {}
+    for ci, (off, size) in enumerate(chunks):
+        table.append((ci * num_writers // len(chunks), off, size))
+        payloads[off] = raw[off: off + size]
+    return _RangePlan(table=table, payloads=payloads, sharded=False)
+
+
+def _node_spans(ranges: Sequence[Tuple[int, int]]
+                ) -> List[Tuple[int, int, List[Tuple[int, int]]]]:
+    """Group sorted disjoint ranges into maximal contiguous spans."""
+    spans: List[Tuple[int, int, List[Tuple[int, int]]]] = []
+    for off, size in sorted(ranges):
+        if spans and off == spans[-1][0] + spans[-1][1]:
+            start, length, members = spans.pop()
+            spans.append((start, length + size, members + [(off, size)]))
+        else:
+            spans.append((off, size, [(off, size)]))
+    return spans
+
+
+# ------------------------------------------------------------------- save
+
 def save(ckpt_dir: str, state: Any, step: int, *, chunk_bytes: int = 1 << 22,
-         num_writers: int = 4, dirty_skip: bool = True) -> CkptStats:
-    """Write a checkpoint through §5 file-mapped chunk data blocks."""
+         num_writers: int = 4, dirty_skip: bool = True,
+         io_latency: float = 1.0, io_mode: str = "async",
+         crash_at: Optional[float] = None) -> CkptStats:
+    """Write a checkpoint through §5 file-mapped blocks / §6 partitions.
+
+    Leaves carrying a ``NamedSharding`` (jax arrays under a mesh) take the
+    sharded path: each node writes exactly its own §6 byte ranges through
+    EW partitions of the leaf's file-mapped chunk.  Host leaves take the
+    fixed-size chunk path.  ``crash_at`` halts the save's runtime at that
+    virtual time *before* the manifest commit (crash-consistency tests):
+    the returned stats have ``committed=False`` and the ``step_N.tmp``
+    directory is left behind, which ``latest_step``/``restore`` ignore.
+    """
     leaves = _flatten(state)
     out_dir = os.path.join(ckpt_dir, f"step_{step}")
     tmp_dir = out_dir + ".tmp"
     os.makedirs(tmp_dir, exist_ok=True)
     stats = CkptStats()
 
-    # previous manifest for dirty-chunk skipping
-    prev_hashes: Dict[str, List[str]] = {}
-    prev_dir = None
+    prev_dir: Optional[str] = None
+    prev_leaves: Dict[str, Any] = {}
     if dirty_skip:
-        prev = latest_step(ckpt_dir)
-        if prev is not None:
-            prev_dir = os.path.join(ckpt_dir, f"step_{prev}")
-            with open(os.path.join(prev_dir, "manifest.json")) as f:
-                pm = json.load(f)
-            if pm.get("chunk_bytes") == chunk_bytes:
-                prev_hashes = {l["path"]: l["chunk_hashes"]
-                               for l in pm["leaves"]}
+        prev_dir, prev_leaves = _load_prev_manifest(ckpt_dir)
 
     manifest: Dict[str, Any] = {
         "step": step, "chunk_bytes": chunk_bytes, "leaves": []}
 
-    rt = Runtime(num_nodes=num_writers)
+    rt = Runtime(num_nodes=num_writers, io_latency=io_latency,
+                 io_mode=io_mode)
+
+    # (leaf_idx, offset) -> payload bytes, consulted by writer EDT bodies
+    pending_payloads: Dict[Tuple[int, int], bytes] = {}
+    pending_files: List[Tuple[str, str]] = []
+    plans: List[Tuple[int, str, _RangePlan, List[str]]] = []
+
+    for li, (path, leaf) in enumerate(leaves):
+        plan = _plan_sharded(leaf, num_writers)
+        if plan is None:
+            arr = _to_host(leaf, stats)
+            plan = _plan_chunked(arr, chunk_bytes, num_writers)
+            shape, dtype, nbytes = list(arr.shape), str(arr.dtype), arr.nbytes
+        else:
+            shape, dtype = list(leaf.shape), str(leaf.dtype)
+            nbytes = int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+        hashes = [hashlib.sha1(plan.payloads[off]).hexdigest()
+                  for (_n, off, _s) in plan.table]
+        fname = f"leaf_{li}.bin"
+        entry = {
+            "path": path, "file": fname, "shape": shape, "dtype": dtype,
+            "nbytes": nbytes,
+            "chunks": [[off, size] for (_n, off, size) in plan.table],
+            "chunk_hashes": hashes,
+        }
+        if plan.sharded:
+            entry["ranges"] = [[n, off, size] for (n, off, size) in plan.table]
+        manifest["leaves"].append(entry)
+        stats.chunks_total += len(plan.table)
+
+        # dirty-range skipping: only against an identical table layout
+        prev_entry = prev_leaves.get(path)
+        prev_hashes: Optional[List[str]] = None
+        if prev_entry is not None and prev_dir is not None and \
+                [list(c) for c in prev_entry.get("chunks", [])] == \
+                entry["chunks"]:
+            prev_hashes = prev_entry.get("chunk_hashes")
+        if prev_hashes == hashes and prev_hashes is not None:
+            # §5 dirty tracking: nothing modified → reuse previous file
+            stats.chunks_skipped += len(plan.table)
+            pending_files.append((os.path.join(prev_dir, fname),
+                                  os.path.join(tmp_dir, fname)))
+            continue
+        clean: List[bool] = [False] * len(plan.table)
+        if prev_hashes is not None:
+            # copy-forward unchanged ranges from the previous file; they
+            # still go through a writer (the new file must be complete)
+            # but do not count as dirty.  Seek-read only those ranges —
+            # never the whole previous file.
+            with open(os.path.join(prev_dir, fname), "rb") as f:
+                for i, (_n, off, size) in enumerate(plan.table):
+                    if i < len(prev_hashes) and prev_hashes[i] == hashes[i]:
+                        f.seek(off)
+                        plan.payloads[off] = f.read(size)
+                        clean[i] = True
+        for i, (_n, off, size) in enumerate(plan.table):
+            key = (li, off)
+            pending_payloads[key] = plan.payloads[off]
+            if clean[i]:
+                stats.chunks_skipped += 1
+            else:
+                stats.chunks_written += 1
+                stats.bytes_written += size
+        plans.append((li, os.path.join(tmp_dir, fname), plan))
 
     def writer(paramv, depv, api):
-        (leaf_idx, off, size) = paramv
-        _, arr = leaves[leaf_idx]
-        raw = arr.tobytes()
-        depv[0].ptr[:size] = np.frombuffer(raw[off: off + size], dtype=np.uint8)
+        (li, off, size) = paramv
+        data = pending_payloads[(li, off)]
+        depv[0].ptr[:size] = np.frombuffer(data, dtype=np.uint8)
         api.db_destroy(depv[0].guid)   # EW write-back happens here (§5)
         return NULL_GUID
 
-    pending_files = []
+    def opener(paramv, depv, api):
+        """Per-(leaf, node) §6 writer fan-out, running *on* that node.
+
+        Maps the node's contiguous spans as file chunks, partitions each
+        span into the node's individual §6 ranges, and hangs one EW
+        writer EDT off every partition — so each node writes exactly its
+        own byte ranges, and adjacent ranges coalesce at write-back.
+        """
+        (li, node, ranges) = paramv
+        fg = api.file_get_guid(depv[0].ptr)
+        wt = api.edt_template_create(writer, 3, 1)
+        for (span_off, span_size, members) in _node_spans(ranges):
+            chunk = api.file_get_chunk(fg, span_off, span_size,
+                                       write_only=True)
+            parts = api.db_partition(
+                chunk, [(off - span_off, size) for (off, size) in members])
+            for part, (off, size) in zip(parts, members):
+                api.edt_create(wt, paramv=[li, off, size], depv=[part],
+                               dep_modes=[DbMode.EW], placement=node)
+            api.db_destroy(chunk)      # deferred until partitions retire
+        api.file_release(fg)
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
 
     def main(paramv, depv, api):
-        wt = api.edt_template_create(writer, 3, 1)
-        for li, (path, arr) in enumerate(leaves):
-            nbytes = arr.nbytes
-            fname = f"leaf_{li}.bin"
-            fpath = os.path.join(tmp_dir, fname)
-            table = _chunk_table(nbytes, chunk_bytes)
-            raw = arr.tobytes()
-            hashes = [hashlib.sha1(raw[o: o + s]).hexdigest()
-                      for (o, s) in table]
-            manifest["leaves"].append({
-                "path": path, "file": fname, "shape": list(arr.shape),
-                "dtype": str(arr.dtype), "nbytes": nbytes,
-                "chunks": table, "chunk_hashes": hashes})
-            stats.chunks_total += len(table)
-
-            unchanged = prev_hashes.get(path)
-            all_skip = (unchanged == hashes and prev_dir is not None)
-            if all_skip:
-                # §5 dirty tracking: nothing modified → reuse previous file
-                stats.chunks_skipped += len(table)
-                pending_files.append((os.path.join(prev_dir, fname), fpath))
+        ot = api.edt_template_create(opener, 3, 1)
+        for li, fpath, plan in plans:
+            if not plan.table:
+                with open(fpath, "wb"):
+                    pass               # empty leaf: just create the file
                 continue
-
-            fg, _desc = api.file_open(fpath, "wb+")
-            if nbytes == 0:
-                api.file_release(fg)
-                continue
-            for ci, (off, size) in enumerate(table):
-                if unchanged and ci < len(unchanged) and \
-                        unchanged[ci] == hashes[ci] and prev_dir is not None:
-                    # copy-forward unchanged chunk from the previous file
-                    with open(os.path.join(prev_dir, fname), "rb") as f:
-                        f.seek(off)
-                        data = f.read(size)
-                    chunk = api.file_get_chunk(fg, off, size)
-                    db = api.rt.lookup(chunk)
-                    api.rt._materialize(db)[:size] = np.frombuffer(
-                        data, dtype=np.uint8)
-                    db.dirty = True
-                    api.db_destroy(chunk)
-                    stats.chunks_skipped += 1
-                    continue
-                chunk = api.file_get_chunk(fg, off, size)
-                api.edt_create(wt, paramv=[li, off, size], depv=[chunk],
-                               dep_modes=[DbMode.EW],
-                               placement=ci % num_writers)
-                stats.chunks_written += 1
-                stats.bytes_written += size
-            api.file_release(fg)
+            by_node: Dict[int, List[Tuple[int, int]]] = {}
+            for (node, off, size) in plan.table:
+                by_node.setdefault(node, []).append((off, size))
+            for node, ranges in sorted(by_node.items()):
+                fg, desc = api.file_open(fpath, "wb+")
+                api.edt_create(ot, paramv=[li, node, ranges], depv=[desc],
+                               placement=node)
         return NULL_GUID
 
     spawn_main(rt, main)
-    rt.run()
+    rt.run(until=crash_at)
+    if crash_at is not None and not rt.quiescent():
+        # simulated crash mid-flush: in-flight IO-queue writes are lost
+        # and the manifest is never committed — step_N.tmp is dead weight
+        stats.committed = False
+        stats.io_write_ops = rt.stats.io_write_ops
+        stats.io_coalesced_writes = rt.stats.io_coalesced_writes
+        stats.makespan = rt.stats.makespan
+        return stats
 
     for src, dst in pending_files:
         if os.path.abspath(src) != os.path.abspath(dst):
@@ -185,21 +385,108 @@ def save(ckpt_dir: str, state: Any, step: int, *, chunk_bytes: int = 1 << 22,
         import shutil
         shutil.rmtree(out_dir)
     os.rename(tmp_dir, out_dir)          # commit point
+    stats.io_write_ops = rt.stats.io_write_ops
+    stats.io_coalesced_writes = rt.stats.io_coalesced_writes
+    stats.makespan = rt.stats.makespan
     return stats
 
 
-def async_save(ckpt_dir: str, state: Any, step: int, **kw) -> threading.Thread:
-    """Issue-now/resolve-later (§3): snapshot to host and write off-thread."""
-    snap = [(p, np.array(a, copy=True)) for p, a in _flatten(state)]
-    tree = _unflatten(dict(snap))
-    t = threading.Thread(target=save, args=(ckpt_dir, tree, step), kwargs=kw)
-    t.start()
-    return t
+# ------------------------------------------------------------ cost model
 
+def io_cost(shapes: Any, shardings: Any, *, io_latency: float = 1.0,
+            num_writers: Optional[int] = None) -> Dict[str, float]:
+    """Model a sharded checkpoint write under the §5 latency model.
+
+    Pure arithmetic — no save runs.  Lowers every leaf to its §6 ranges
+    (:func:`repro.dist.sharding.device_ranges_of`), dedups replicas,
+    assigns ranges to writer nodes, coalesces each node's adjacent
+    ranges, and charges ``io_latency`` per post-coalescing op on per-node
+    disks: the virtual write time is the busiest node's op count × the
+    latency.  ``launch.dryrun`` folds this into its roofline record so
+    checkpoint IO is costed from the same model the runtime charges.
+    """
+    from repro.dist.sharding import device_ranges_of
+    shape_leaves = _flatten(shapes)
+    sh_by_path = dict(_flatten(shardings))
+    ranges_total = 0
+    bytes_total = 0
+    ops_per_node: Dict[int, int] = {}
+    for path, leaf in shape_leaves:
+        sharding = sh_by_path.get(path)
+        if sharding is None or not hasattr(sharding, "mesh"):
+            continue
+        if num_writers is None:
+            num_writers = int(sharding.mesh.size)
+        itemsize = np.dtype(leaf.dtype).itemsize
+        per_dev = device_ranges_of(leaf.shape, itemsize, sharding)
+        seen: set = set()
+        by_node: Dict[int, List[Tuple[int, int]]] = {}
+        for dev_idx, (_dev, ranges) in enumerate(per_dev):
+            fresh = [r for r in ranges if r not in seen]
+            if not fresh:
+                continue
+            seen.update(fresh)
+            by_node.setdefault(dev_idx % num_writers, []).extend(fresh)
+        for node, ranges in by_node.items():
+            ranges_total += len(ranges)
+            bytes_total += sum(s for _o, s in ranges)
+            ops_per_node[node] = ops_per_node.get(node, 0) \
+                + len(_node_spans(ranges))
+    ops = sum(ops_per_node.values())
+    return {
+        "ranges": ranges_total,
+        "io_write_ops": ops,
+        "io_coalesced_writes": ranges_total - ops,
+        "bytes": bytes_total,
+        "nodes": len(ops_per_node),
+        "write_time_virtual": (max(ops_per_node.values()) * io_latency
+                               if ops_per_node else 0.0),
+    }
+
+
+# ------------------------------------------------------------- async save
+
+class _SaveHandle:
+    """Join-able result of :func:`async_save` (thread-API compatible)."""
+
+    def __init__(self, stats: CkptStats):
+        self.stats = stats
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        return None
+
+    def is_alive(self) -> bool:
+        return False
+
+
+def async_save(ckpt_dir: str, state: Any, step: int, **kw) -> _SaveHandle:
+    """Issue-now/resolve-later (§3) save through the §5 IO queue.
+
+    Mutable host leaves are snapshot at issue time (device arrays are
+    immutable and pass through untouched — no gather), then the write
+    rides the runtime's asynchronous IO queue: overlap is modeled by the
+    latency-charged subsystem itself rather than an ad-hoc host thread.
+    Note the *wall-clock* call is synchronous — the returned handle is
+    already complete and ``join()`` is a no-op kept for API parity.
+    """
+    snap = {p: (np.array(a, copy=True) if isinstance(a, np.ndarray)
+                else a)
+            for p, a in _flatten(state)}
+    return _SaveHandle(save(ckpt_dir, _unflatten(snap), step, **kw))
+
+
+# ---------------------------------------------------------------- restore
 
 def restore(ckpt_dir: str, step: Optional[int] = None,
-            num_readers: int = 4) -> Tuple[Any, int]:
-    """Reassemble the checkpoint tree (elastic: any reader count)."""
+            num_readers: int = 4, io_latency: float = 1.0,
+            shardings: Any = None) -> Tuple[Any, int]:
+    """Reassemble the checkpoint tree (elastic: any reader count or mesh).
+
+    The §6 range manifest lets any mesh shape restore from any other:
+    ranges are read back as §5 chunks and reassembled into full leaves;
+    pass ``shardings`` (a pytree of ``NamedSharding`` matching the saved
+    tree) to place each leaf directly onto a — possibly different — mesh.
+    """
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -208,8 +495,8 @@ def restore(ckpt_dir: str, step: Optional[int] = None,
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
 
-    items: Dict[str, np.ndarray] = {}
-    rt = Runtime(num_nodes=num_readers)
+    items: Dict[str, Any] = {}
+    rt = Runtime(num_nodes=num_readers, io_latency=io_latency)
     buffers: Dict[int, bytearray] = {}
 
     def reader(paramv, depv, api):
@@ -225,6 +512,8 @@ def restore(ckpt_dir: str, step: Optional[int] = None,
         fg = api.file_get_guid(depv[0].ptr)
         tmpl = api.edt_template_create(reader, 3, 1)
         for ci, (off, size) in enumerate(leaf["chunks"]):
+            if size == 0:
+                continue
             chunk = api.file_get_chunk(fg, off, size)
             api.edt_create(tmpl, paramv=[li, off, size], depv=[chunk],
                            dep_modes=[DbMode.RO],
@@ -246,8 +535,16 @@ def restore(ckpt_dir: str, step: Optional[int] = None,
     spawn_main(rt, main)
     rt.run()
 
+    sh_by_path: Dict[str, Any] = {}
+    if shardings is not None:
+        sh_by_path = dict(_flatten(shardings))
     for li, leaf in enumerate(manifest["leaves"]):
         arr = np.frombuffer(bytes(buffers[li]),
                             dtype=np.dtype(leaf["dtype"]))
-        items[leaf["path"]] = arr.reshape(leaf["shape"])
+        arr = arr.reshape(leaf["shape"])
+        sh = sh_by_path.get(leaf["path"])
+        if sh is not None:
+            import jax
+            arr = jax.device_put(arr, sh)
+        items[leaf["path"]] = arr
     return _unflatten(items), manifest["step"]

@@ -1,0 +1,180 @@
+"""Latency-modeled asynchronous file IO (§5) — the per-node IO queue.
+
+The paper's §5 file IO builds on data blocks precisely so an implementation
+can overlap IO with compute and write back lazily.  This module is that
+implementation: every chunk read/write becomes an :class:`IoOp` on the
+owning node's virtual-time disk queue instead of a blocking call inside
+``Runtime._materialize`` / ``Runtime._destroy_db``.
+
+Model
+-----
+* Each node owns one disk.  An operation occupies the disk for
+  ``Runtime.io_latency`` of virtual time (the per-chunk seek/roundtrip
+  cost); requests queue FIFO per node (``start = max(now, disk_free)``).
+* **Reads** are issued ahead of use ("read-ahead"): at ``file_get_chunk``
+  time when ``Runtime.read_ahead`` is on, else at the first grant attempt
+  of an acquiring EDT.  A data block with a read in flight is *IO-pending*:
+  EDT grants defer on it through the ordinary waiter queues and resume
+  when the :class:`~repro.core.messages.MIoDone` completion lands.
+* **Writes** (dirty write-back at release/destroy) buffer for the current
+  virtual timestamp and flush together, coalescing *adjacent* dirty ranges
+  of one file on one node into a single disk operation — m chunk
+  write-backs pay one ``io_latency`` instead of m
+  (``Stats.io_coalesced_writes`` counts the absorbed chunks).
+* The **real** OS read/write happens when the completion is delivered, so
+  a fail-stopped node (``kill_node``) or a halted run (``run(until)``)
+  loses exactly the in-flight operations — the crash semantics the
+  checkpoint layer's commit protocol is tested against.
+
+``io_mode="sync"`` drives the same latency model without the overlap: the
+read is charged to the acquiring task's blocking time at execution and the
+write-back is charged (and performed) synchronously at destroy, one
+operation per chunk, no coalescing.  That is the baseline
+``benchmarks/bench_fileio.py`` compares the async path against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple, TYPE_CHECKING
+
+if TYPE_CHECKING:                                       # pragma: no cover
+    from .guid import Guid
+    from .runtime import Runtime
+
+__all__ = ["IoOp", "IoQueue"]
+
+
+@dataclasses.dataclass
+class IoOp:
+    """One disk operation (post-coalescing) on a node's IO queue."""
+
+    kind: str                         # "read" | "write"
+    node: int
+    path: str
+    offset: int
+    size: int
+    db: Optional["Guid"] = None       # read target data block
+    file: Optional["Guid"] = None
+    data: Optional[bytes] = None      # write payload, snapshot at enqueue
+    chunks: int = 1                   # chunk write-backs merged into this op
+    performed: bool = False           # sync mode: OS IO already done
+    enqueued_at: float = 0.0
+    start: float = 0.0                # disk busy interval [start, done)
+    done: float = 0.0
+
+
+class IoQueue:
+    """Per-node virtual-time disk queues (§5 async IO subsystem)."""
+
+    def __init__(self, rt: "Runtime"):
+        self.rt = rt
+        # node -> virtual time its disk becomes free
+        self._free_at: Dict[int, float] = {}
+        # write-back coalescing window: ops enqueued at the current
+        # timestamp flush together (mirrors the §6.3 copy batching)
+        self._write_buffer: List[IoOp] = []
+        self._flush_scheduled = False
+        self.inflight = 0                 # ops submitted, completion not seen
+        self.reads_inflight = 0
+
+    # ------------------------------------------------------------ plumbing
+
+    def _service(self, op: IoOp, at: float) -> float:
+        """Occupy ``op.node``'s disk for one ``io_latency``; return done."""
+        free = self._free_at.get(op.node, 0.0)
+        op.enqueued_at = at
+        op.start = max(at, free)
+        op.done = op.start + self.rt.io_latency
+        self._free_at[op.node] = op.done
+        return op.done
+
+    def _submit(self, op: IoOp, at: float) -> float:
+        from .messages import MIoDone
+        done = self._service(op, at)
+        self.inflight += 1
+        if op.kind == "read":
+            self.rt.stats.io_read_ops += 1
+            self.reads_inflight += 1
+            if self.reads_inflight > self.rt.stats.io_reads_inflight_max:
+                self.rt.stats.io_reads_inflight_max = self.reads_inflight
+        else:
+            self.rt.stats.io_write_ops += 1
+        self.rt.send(MIoDone(op=op), op.node, op.node, at=done)
+        return done
+
+    def complete(self, op: IoOp) -> None:
+        """Bookkeeping when an op's MIoDone is delivered (or dropped)."""
+        self.inflight = max(0, self.inflight - 1)
+        if op.kind == "read":
+            self.reads_inflight = max(0, self.reads_inflight - 1)
+
+    # --------------------------------------------------------------- reads
+
+    def submit_read(self, db, f, at: Optional[float] = None) -> float:
+        """Enqueue the §5 lazy read of ``db``'s file range (idempotent)."""
+        if db.io_pending:
+            return 0.0
+        db.io_pending = True
+        op = IoOp(kind="read", node=db.node, path=f.path,
+                  offset=db.file_offset, size=db.size,
+                  db=db.guid, file=f.guid)
+        return self._submit(op, self.rt.clock if at is None else at)
+
+    # -------------------------------------------------------------- writes
+
+    def submit_write(self, db, f, at: Optional[float] = None) -> None:
+        """Buffer a dirty-range write-back for same-timestamp coalescing."""
+        op = IoOp(kind="write", node=db.node, path=f.path,
+                  offset=db.file_offset, size=db.size,
+                  db=db.guid, file=f.guid, data=db.buffer.tobytes())
+        self._write_buffer.append(op)
+        if not self._flush_scheduled:
+            self._flush_scheduled = True
+            heapq.heappush(self.rt._heap,
+                           (self.rt.clock if at is None else at,
+                            next(self.rt._tick), "io_flush", None))
+
+    def flush_writes(self) -> None:
+        """Coalesce the buffered write-backs and put them on the disks.
+
+        Ranges are adjacent-merged per ``(node, path)``: §5 chunks of one
+        file never overlap, so a sorted linear sweep suffices, and the
+        merged payload is the concatenation in offset order.
+        """
+        buf, self._write_buffer = self._write_buffer, []
+        self._flush_scheduled = False
+        if not buf:
+            return
+        groups: Dict[Tuple[int, str], List[IoOp]] = {}
+        for op in buf:
+            groups.setdefault((op.node, op.path), []).append(op)
+        for (_node, _path), ops in sorted(groups.items()):
+            ops.sort(key=lambda o: o.offset)
+            merged = ops[0]
+            for op in ops[1:]:
+                if op.offset == merged.offset + merged.size:
+                    merged.data = (merged.data or b"") + (op.data or b"")
+                    merged.size += op.size
+                    merged.chunks += op.chunks
+                    self.rt.stats.io_coalesced_writes += op.chunks
+                else:
+                    self._submit(merged, self.rt.clock)
+                    merged = op
+            self._submit(merged, self.rt.clock)
+
+    # ---------------------------------------------------------- sync mode
+
+    def charge_sync(self, db, f, kind: str) -> float:
+        """``io_mode="sync"``: same disk model, no overlap, no coalescing.
+
+        The caller performs the OS IO immediately; this occupies the disk
+        and returns the virtual time the caller must block
+        (``done - now``).  The pre-``performed`` completion still flows
+        through the queue so the makespan covers the disk busy interval.
+        """
+        op = IoOp(kind=kind, node=db.node, path=f.path,
+                  offset=db.file_offset, size=db.size,
+                  db=db.guid, file=f.guid, performed=True)
+        done = self._submit(op, self.rt.clock)
+        return done - self.rt.clock

@@ -169,6 +169,22 @@ class MDbCopy(Message):
 
 
 @dataclasses.dataclass
+class MIoDone(Message):
+    """Completion of one asynchronous §5 disk operation (io_queue.IoOp).
+
+    Delivered on the owning node at the op's virtual completion time; the
+    real OS read/write happens at delivery, so operations in flight on a
+    fail-stopped node (or past a ``run(until)`` horizon) are lost — the
+    crash semantics checkpoint commit is built on.
+    """
+
+    op: Any = None
+
+    def patch(self, mapping):
+        pass
+
+
+@dataclasses.dataclass
 class MFileOpened(Message):
     """Asynchronous completion of ocrFileOpen: fills the descriptor DB (§5)."""
 

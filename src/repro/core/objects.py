@@ -122,6 +122,7 @@ class DbObj:
     file_offset: int = 0
     dirty: bool = False
     lazy_file_read: bool = False                   # contents read at first acquire
+    io_pending: bool = False                       # async §5 read in flight
     # --- lock state ---
     readers: int = 0
     writer: Optional[Guid] = None                  # holding EDT guid

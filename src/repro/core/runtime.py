@@ -16,7 +16,11 @@ distributed OCR implementation:
   owner runs the creator function exactly once per index, and all LIDs for
   an index resolve to the same GUID.
 * **File IO (§5)** — file-mapped data blocks with asynchronously-filled
-  descriptor blocks, non-overlapping chunks, dirty-only write-back.
+  descriptor blocks, non-overlapping chunks, dirty-only write-back.  Chunk
+  reads/writes ride per-node virtual-time IO queues (``io_queue.IoQueue``):
+  reads stream ahead of first acquire, grants defer on IO-pending blocks,
+  and adjacent dirty ranges coalesce into one write-back op
+  (``Runtime(io_mode="sync")`` keeps the blocking per-chunk baseline).
 * **Partitioning (§6)** — disjoint EW partitions of one data block execute
   in parallel; the parent is quiescent while partitions live; parent+child
   in one task raises :class:`PartitionDeadlockError`; ``db_copy`` implements
@@ -58,12 +62,14 @@ from .guid import (
     id_type,
     is_null,
 )
+from .io_queue import IoQueue
 from .messages import (
     MCreate,
     MDbCopy,
     MDep,
     MDestroy,
     MFileOpened,
+    MIoDone,
     MMap,
     MMapGet,
     MSatisfy,
@@ -117,6 +123,11 @@ class Stats:
     file_bytes_read: int = 0
     file_bytes_written: int = 0
     fused_copies: int = 0
+    io_read_ops: int = 0
+    io_write_ops: int = 0
+    io_reads_inflight_max: int = 0
+    io_coalesced_writes: int = 0
+    io_overlap_ticks: float = 0.0
     makespan: float = 0.0
 
     def snapshot(self) -> Dict[str, float]:
@@ -154,6 +165,8 @@ class Runtime:
         trace: bool = False,
         copy_backend: str = "numpy",
         reader_batch_bound: int = 8,
+        io_mode: str = "async",
+        read_ahead: bool = True,
     ):
         self.num_nodes = num_nodes
         self.net_latency = float(net_latency)
@@ -162,6 +175,15 @@ class Runtime:
         self.rng = random.Random(seed)
         self.trace = trace
         self.copy_backend = copy_backend  # "numpy" | "pallas" (§6.3 fallback)
+        # §5 file IO discipline: "async" puts chunk reads/writes on the
+        # per-node IO queues (overlap with compute, write coalescing);
+        # "sync" drives the same latency model blocking, per chunk
+        if io_mode not in ("async", "sync"):
+            raise ValueError(f"io_mode must be 'async' or 'sync', not {io_mode!r}")
+        self.io_mode = io_mode
+        # async mode: issue the lazy read already at file_get_chunk time
+        # (ahead of the first acquire) instead of at the first grant attempt
+        self.read_ahead = read_ahead
         # max RO waiters granted past a blocked FIFO head per wake (bounded
         # barging: 0 disables; keeps writers from starving behind readers)
         self.reader_batch_bound = reader_batch_bound
@@ -192,6 +214,11 @@ class Runtime:
         self._copy_flush_scheduled = False
         # registry so file descriptors can be decoded from raw pointers (§5)
         self.file_registry: List[Guid] = []
+        # §5 async IO subsystem: per-node virtual-time disk queues
+        self.io = IoQueue(self)
+        # tasks currently occupying a virtual-time window (for
+        # Stats.io_overlap_ticks: time IO and compute were both in flight)
+        self._running_tasks = 0
 
     # ------------------------------------------------------------------ util
 
@@ -291,6 +318,12 @@ class Runtime:
                 # event against same-timestamp peers on resume
                 heapq.heappush(self._heap, (t, tick, kind, payload))
                 break
+            if t > self.clock and self.io.inflight > 0 \
+                    and self._running_tasks > 0:
+                # both a disk op and a task occupy this interval: the IO
+                # was hidden behind compute (the §5 overlap the async
+                # queue exists to buy)
+                self.stats.io_overlap_ticks += t - self.clock
             self.clock = max(self.clock, t)
             if kind == "msg":
                 if payload.uid in self._cancelled:
@@ -298,8 +331,14 @@ class Runtime:
                 self._dispatch(payload)
             elif kind == "task_end":
                 self._task_end(payload)
+            elif kind == "task_compute":
+                # a sync-mode task finished blocking on its charged IO
+                # and is computing from here on
+                self._running_tasks += 1
             elif kind == "copy_flush":
                 self._flush_copy_batch()
+            elif kind == "io_flush":
+                self.io.flush_writes()
             elif kind == "db_copy":
                 self._do_db_copy(payload)
         self.stats.makespan = self.clock
@@ -316,6 +355,10 @@ class Runtime:
 
     def _dispatch(self, msg: Message) -> None:
         if not self.nodes[msg.dst_node].alive:
+            if isinstance(msg, MIoDone):
+                # the disk died with its node: the op's bytes are lost
+                # (crash semantics), but the inflight accounting is not
+                self.io.complete(msg.op)
             self._log("DROP (dead node)", type(msg).__name__)
             return
         handler = getattr(self, f"_on_{type(msg).__name__}")
@@ -523,6 +566,14 @@ class Runtime:
             if db.partitions or not db.available(mode):
                 self._enqueue_waiter(edt, db.guid)
                 return db.guid
+            # §5 async IO: a block whose lazy read has not landed defers
+            # the grant through the same waiter queue; the grant attempt
+            # itself issues the read if read-ahead did not already
+            if self.io_mode == "async" and db.buffer is None \
+                    and (db.io_pending or db.lazy_file_read):
+                self._start_read(db)
+                self._enqueue_waiter(edt, db.guid)
+                return db.guid
         for db, mode in deps:
             if mode in (DbMode.RO, DbMode.CONST):
                 db.readers += 1
@@ -639,7 +690,23 @@ class Runtime:
             if db is None or db.partitions or not db.available(DbMode.RO):
                 break
 
+    def _start_read(self, db: DbObj) -> None:
+        """Enqueue the §5 lazy read of ``db`` on its node's IO queue."""
+        if db.io_pending or db.buffer is not None or db.file_guid is None:
+            return
+        f: FileObj = self.lookup(db.file_guid)
+        self.io.submit_read(db, f)
+        self._log("IO read", db.guid, f"[{db.file_offset},+{db.size})")
+
     def _materialize(self, db: DbObj) -> np.ndarray:
+        """Synchronous materialization (zero virtual-time charge).
+
+        EDT acquisitions never reach this with an unread file chunk — the
+        grant defers until the async read lands (or, in sync mode,
+        ``_execute`` charges the read to the task's blocking time).  The
+        remaining callers (§6.3 copies, ``db_partition``, descriptor
+        fill) keep the seed's immediate-read semantics.
+        """
         if db.buffer is None:
             if db.lazy_file_read and db.file_guid is not None:
                 f: FileObj = self.lookup(db.file_guid)
@@ -655,9 +722,20 @@ class Runtime:
         edt.start_time = self.clock
         tmpl: TemplateObj = self.lookup(edt.template)
         depv = []
+        io_wait = 0.0
         for s, mode in zip(edt.slots, edt.modes):
             if isinstance(s, Guid) and s.kind == ObjectKind.DATABLOCK:
                 db = self.lookup(s)
+                if self.io_mode == "sync" and db.buffer is None \
+                        and db.lazy_file_read and db.file_guid is not None:
+                    # sync baseline: the reads happen inside the task's
+                    # window, charged per chunk to its blocking time.
+                    # charge_sync returns (op done - now): ops on one
+                    # node's disk queue already serialize against each
+                    # other, so the task blocks until the *latest* one —
+                    # max, not sum (summing double-counts the queueing)
+                    f: FileObj = self.lookup(db.file_guid)
+                    io_wait = max(io_wait, self.io.charge_sync(db, f, "read"))
                 buf = self._materialize(db)
                 if mode in (DbMode.RO, DbMode.CONST):
                     view = buf.view()
@@ -669,6 +747,15 @@ class Runtime:
                 depv.append(DepEntry(guid=s if isinstance(s, Guid) else NULL_GUID,
                                      ptr=None, mode=mode))
         ctx = TaskCtx(self, edt.node, edt)
+        ctx.blocking_time += io_wait
+        if io_wait > 0:
+            # the task spends [now, now + io_wait) blocked on its own
+            # charged IO — that is not compute, so it must not count
+            # toward io_overlap_ticks until the wait elapses
+            heapq.heappush(self._heap, (self.clock + io_wait,
+                                        next(self._tick), "task_compute", None))
+        else:
+            self._running_tasks += 1
         self._log("RUN", edt.guid, tmpl.func.__name__)
         ret = tmpl.func(list(edt.paramv), depv, ctx)
         self.stats.tasks_executed += 1
@@ -679,6 +766,7 @@ class Runtime:
     def _task_end(self, payload: Tuple[Guid, Any]) -> None:
         guid, ret = payload
         edt: EdtObj = self.lookup(guid)
+        self._running_tasks = max(0, self._running_tasks - 1)
         released: List[DbObj] = []
         for db, mode in self._dep_dbs(edt):
             if mode in (DbMode.RO, DbMode.CONST):
@@ -745,12 +833,19 @@ class Runtime:
                     else:
                         # last partition gone: the parent is acquirable again
                         self._wake_waiters(parent.guid)
-        # §5 write-back: dirty chunks flush; enlarging chunks enlarge
+        # §5 write-back: dirty chunks flush; enlarging chunks enlarge.
+        # Async mode enqueues the write on the node's IO queue (adjacent
+        # dirty ranges coalesce; the OS write lands at completion time);
+        # sync mode writes here, charging the same per-chunk latency.
         if db.file_guid is not None:
             f: FileObj = self.lookup(db.file_guid)
             if db.dirty and f.writable and db.buffer is not None:
-                _write_file_region(f.path, db.file_offset, db.buffer)
-                self.stats.file_bytes_written += db.size
+                if self.io_mode == "async":
+                    self.io.submit_write(db, f)
+                else:
+                    self.io.charge_sync(db, f, "write")
+                    _write_file_region(f.path, db.file_offset, db.buffer)
+                    self.stats.file_bytes_written += db.size
             elif f.writable and db.file_offset + db.size > _file_size(f.path):
                 _enlarge_file(f.path, db.file_offset + db.size)
             f.chunks.pop(db.guid, None)
@@ -949,6 +1044,30 @@ class Runtime:
                       msg.dst_node, ev.node)
 
     # -- file IO (§5) -----------------------------------------------------------
+
+    def _on_MIoDone(self, msg: MIoDone) -> None:
+        """One async disk op completed: perform the OS IO, wake waiters."""
+        op = msg.op
+        self.io.complete(op)
+        if op.kind == "read":
+            db = self.try_lookup(op.db)
+            if db is None:
+                return                       # destroyed while in flight
+            db.io_pending = False
+            if not op.performed and db.buffer is None and db.lazy_file_read:
+                db.buffer = _read_file_region(op.path, op.offset, op.size)
+                db.lazy_file_read = False
+                self.stats.file_bytes_read += op.size
+            self._log("IO done (read)", op.db)
+            # grants deferred on the IO-pending block retry now
+            self._wake_waiters(db.guid)
+        else:
+            if not op.performed and op.data is not None:
+                _write_file_region(op.path, op.offset,
+                                   np.frombuffer(op.data, dtype=np.uint8))
+                self.stats.file_bytes_written += op.size
+                self._log("IO done (write)",
+                          f"{op.path}[{op.offset},+{op.size}) x{op.chunks}")
 
     def _on_MFileOpened(self, msg: MFileOpened) -> None:
         f: FileObj = self.lookup(msg.file_guid)
@@ -1203,9 +1322,15 @@ class TaskCtx:
         out = []
         for (o, s) in parts:
             g = self.rt._alloc_guid(parent.guid.node, ObjectKind.DATABLOCK)
+            # partitions of a file-mapped block inherit the file binding:
+            # each child writes back exactly its own §6 byte range when
+            # destroyed dirty (the sharded-checkpoint write path), instead
+            # of the parent rewriting the whole chunk
             child = DbObj(guid=g, size=s, node=parent.guid.node,
                           buffer=buf[o: o + s], parent=parent.guid,
-                          offset_in_parent=o, is_view=True)
+                          offset_in_parent=o, is_view=True,
+                          file_guid=parent.file_guid,
+                          file_offset=parent.file_offset + o)
             child.ready = True
             child.pending_deps = []
             self.rt.nodes[parent.guid.node].objects[g] = child
@@ -1281,8 +1406,14 @@ class TaskCtx:
         _, key = struct.unpack("<QQ", bytes(descriptor_ptr[:16]))
         return self.rt.file_registry[key]
 
-    def file_get_chunk(self, file: Any, offset: int, size: int) -> Guid:
-        """``ocrFileGetChunk``: map a contiguous file range into a data block."""
+    def file_get_chunk(self, file: Any, offset: int, size: int,
+                       write_only: bool = False) -> Guid:
+        """``ocrFileGetChunk``: map a contiguous file range into a data block.
+
+        ``write_only`` chunks skip the lazy read entirely (the caller
+        promises to overwrite the whole range — e.g. checkpoint writers),
+        so no read op is charged for ranges whose prior contents are dead.
+        """
         f: FileObj = self.rt.lookup(self.rt.resolve(file))
         if f.closed:
             raise OcrError(f"file {f.guid} already closed")
@@ -1294,11 +1425,16 @@ class TaskCtx:
                 f"chunk [{offset},+{size}) extends past EOF of read-only file")
         g = self.rt._alloc_guid(self.node, ObjectKind.DATABLOCK)
         db = DbObj(guid=g, size=size, node=self.node, file_guid=f.guid,
-                   file_offset=offset, lazy_file_read=True)
+                   file_offset=offset, lazy_file_read=not write_only)
         db.ready = True
         db.pending_deps = []
         self.rt.nodes[self.node].objects[g] = db
         f.chunks[g] = (offset, size)
+        if db.lazy_file_read and self.rt.io_mode == "async" \
+                and self.rt.read_ahead:
+            # §5 read-ahead: the fetch streams on the node's IO queue from
+            # the moment the mapping exists, ahead of the first acquire
+            self.rt.io.submit_read(db, f, at=self.now)
         return g
 
     def file_release(self, file: Any) -> None:

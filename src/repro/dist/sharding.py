@@ -268,24 +268,24 @@ def param_shardings(shapes: Any, ctx: ShardCtx) -> Any:
 
 # ----------------------------------------------------- §6 partition lowering
 
-def partition_tree_of(shape: Tuple[int, ...], itemsize: int,
-                      sharding: NamedSharding) -> List[Tuple[int, int]]:
-    """Lower a sharding to the §6 ``(offset, size)`` byte ranges per device.
+def device_ranges_of(shape: Tuple[int, ...], itemsize: int,
+                     sharding: NamedSharding
+                     ) -> List[Tuple[Any, List[Tuple[int, int]]]]:
+    """Per-device §6 byte ranges of one row-major buffer under a sharding.
 
     Each device's shard is a hyperrectangle of the row-major buffer; it
     lowers to one byte range per contiguous run (one run when only leading
-    dims shard, many when an inner dim shards).  Ranges are emitted in
-    device order; replicated devices repeat ranges — deduplicated, the
-    distinct ranges are mutually disjoint and tile the buffer exactly,
-    which is precisely what ``db_partition`` (§6.2) accepts.  Lane
-    alignment: a run's byte size is a multiple of the trailing-dims byte
-    count, so whenever the innermost *sharded* dim leaves ≥ 32 f32 (128 B)
-    of trailing extent, every range is lane-aligned for the fused-copy
-    kernel (``partition_copy_bytes``).
+    dims shard, many when an inner dim shards), emitted in the shard's own
+    row-major order — so a shard's host bytes split into equal run-sized
+    pieces correspond 1:1, in order, with that device's ranges.  Devices
+    are visited in ``mesh.devices.flat`` order; replicated devices repeat
+    ranges.  This is the §6 range map the sharded checkpoint writer uses
+    to make each node write exactly its own bytes.
     """
     shape = tuple(int(d) for d in shape)
     if not shape:
-        return [(0, itemsize)]
+        # scalar: a single range owned by the first device (all replicate)
+        return [(sharding.mesh.devices.flat[0], [(0, itemsize)])]
     nelems = int(np.prod(shape))
     total = nelems * itemsize
     if nelems == 0:
@@ -295,7 +295,7 @@ def partition_tree_of(shape: Tuple[int, ...], itemsize: int,
     for i in range(len(shape) - 2, -1, -1):
         strides[i] = strides[i + 1] * shape[i + 1]
 
-    out: List[Tuple[int, int]] = []
+    out: List[Tuple[Any, List[Tuple[int, int]]]] = []
     indices_map = sharding.devices_indices_map(shape)
     for dev in sharding.mesh.devices.flat:
         idx = indices_map[dev]
@@ -311,14 +311,33 @@ def partition_tree_of(shape: Tuple[int, ...], itemsize: int,
         while k > 0 and lens[k - 1] == shape[k - 1]:
             k -= 1
         if k == 0:
-            out.append((0, total))
+            out.append((dev, [(0, total)]))
             continue
         run = lens[k - 1] * strides[k - 1]   # bytes per contiguous run
         base = starts[k - 1] * strides[k - 1]
         # iterate the outer (non-run) dims
         outer = [range(s, s + l) for s, l in zip(starts[:k - 1],
                                                  lens[:k - 1])]
+        ranges = []
         for combo in itertools.product(*outer):
             off = base + sum(c * strides[d] for d, c in enumerate(combo))
-            out.append((off, run))
+            ranges.append((off, run))
+        out.append((dev, ranges))
     return out
+
+
+def partition_tree_of(shape: Tuple[int, ...], itemsize: int,
+                      sharding: NamedSharding) -> List[Tuple[int, int]]:
+    """Lower a sharding to the §6 ``(offset, size)`` byte ranges per device.
+
+    Flat view of :func:`device_ranges_of`: ranges in device order,
+    replicated devices repeating theirs — deduplicated, the distinct
+    ranges are mutually disjoint and tile the buffer exactly, which is
+    precisely what ``db_partition`` (§6.2) accepts.  Lane alignment: a
+    run's byte size is a multiple of the trailing-dims byte count, so
+    whenever the innermost *sharded* dim leaves ≥ 32 f32 (128 B) of
+    trailing extent, every range is lane-aligned for the fused-copy
+    kernel (``partition_copy_bytes``).
+    """
+    return [r for _dev, ranges in device_ranges_of(shape, itemsize, sharding)
+            for r in ranges]

@@ -50,7 +50,13 @@ def _mem_dict(mem) -> Dict[str, float]:
 
 
 def lower_cell(cfg, shape, mesh, ctx: ShardCtx):
-    """Build (lowered, compiled) for one cell."""
+    """Build the lowered step for one cell.
+
+    Returns ``(lowered, ckpt_inputs)`` where ``ckpt_inputs`` is the
+    ``(state_shapes, state_shardings)`` pair for train shapes (reused by
+    the ``ckpt_io`` cost model so the OptimizerConfig and eval_shape work
+    are not duplicated) and ``None`` otherwise.
+    """
     import dataclasses
     if shape.kind != "train":
         # serving keeps weights in the compute dtype (no fp32 masters)
@@ -61,11 +67,13 @@ def lower_cell(cfg, shape, mesh, ctx: ShardCtx):
         accum_steps=cfg.train_accum_steps,
         accum_dtype="bfloat16" if cfg.optimizer_state_dtype == "int8"
         else "float32")
+    ckpt_inputs = None
 
     if shape.kind == "train":
         step = make_train_step(model, oc)
         state_shapes = sp.state_specs(cfg, oc)
         state_sh = sp.state_shardings(cfg, oc, ctx)
+        ckpt_inputs = (state_shapes, state_sh)
         batch_shapes = sp.batch_specs(cfg, shape)
         batch_sh = sp.batch_shardings(cfg, shape, ctx)
         fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
@@ -95,7 +103,7 @@ def lower_cell(cfg, shape, mesh, ctx: ShardCtx):
                      in_shardings=(params_sh, cache_sh, tok_sh, cur_sh),
                      donate_argnums=(1,))
         lowered = fn.lower(params_shapes, cache_shapes, tok, cur)
-    return lowered
+    return lowered, ckpt_inputs
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
@@ -114,7 +122,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return rec
     t0 = time.time()
     with use_mesh(mesh, pure_dp=cfg.pure_dp) as ctx:
-        lowered = lower_cell(cfg, shape, mesh, ctx)
+        lowered, ckpt_inputs = lower_cell(cfg, shape, mesh, ctx)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
@@ -133,6 +141,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rl = ha.roofline({"flops": parsed.flops,
                           "bytes accessed": parsed.bytes},
                          coll, mf, num_chips)
+        ckpt_io = None
+        if ckpt_inputs is not None:
+            # checkpoint IO costed from the same §5 latency model the
+            # runtime charges: §6 ranges per node, coalesced, one
+            # io_latency per op on per-node disks
+            from repro import ckpt as _ckpt
+            ckpt_io = _ckpt.io_cost(*ckpt_inputs)
 
     rec.update({
         "status": "ok",
@@ -145,6 +160,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                         "counts": coll["counts"], "total": coll["total"]},
         "roofline": rl.as_dict(),
     })
+    if ckpt_io is not None:
+        rec["ckpt_io"] = ckpt_io
     if verbose:
         print(f"== {arch} × {shape_name} × {rec['mesh']} ==")
         print("  memory_analysis:", json.dumps(rec["memory"]))

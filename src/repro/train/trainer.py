@@ -67,7 +67,18 @@ class Trainer:
         tc = self.tc
         if tc.ckpt_dir and ckpt.latest_step(tc.ckpt_dir) is not None:
             tree, step = ckpt.restore(tc.ckpt_dir)
-            state = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+            if self.mesh is not None:
+                # reshard-on-restore: the §6 range manifest reassembles
+                # full leaves whatever mesh wrote them; place them onto
+                # *this* run's mesh via the suffix param rules
+                from repro.dist.sharding import ShardCtx, param_shardings
+                shapes = jax.tree_util.tree_map(
+                    lambda a: jax.ShapeDtypeStruct(np.asarray(a).shape,
+                                                   np.asarray(a).dtype), tree)
+                shardings = param_shardings(shapes, ShardCtx(mesh=self.mesh))
+                state = jax.tree_util.tree_map(jax.device_put, tree, shardings)
+            else:
+                state = jax.tree_util.tree_map(jax.numpy.asarray, tree)
             self.start_step = step
             return state
         self.start_step = 0
@@ -108,13 +119,27 @@ class Trainer:
             self.history.append(m)
             if tc.ckpt_every and tc.ckpt_dir and (i + 1) % tc.ckpt_every == 0:
                 # checkpoint hangs off this step's event; §5 chunked write,
-                # §3 issue-now/resolve-later (off the step critical path)
-                host = jax.tree_util.tree_map(np.asarray, holder["state"])
-                if tc.async_ckpt:
-                    self._ckpt_threads.append(
-                        ckpt.async_save(tc.ckpt_dir, host, i + 1))
+                # §3 issue-now/resolve-later.  async_ckpt snapshots at
+                # issue time and overlaps inside the runtime's IO queue
+                # (virtual time); the call itself completes before the
+                # next step runs.  Under a mesh the NamedShardings ride
+                # along and
+                # ckpt.save takes the §6 sharded path: each node writes
+                # exactly its own byte ranges, no host-side gather.
+                if self.mesh is not None:
+                    with use_mesh(self.mesh):
+                        if tc.async_ckpt:
+                            self._ckpt_threads.append(ckpt.async_save(
+                                tc.ckpt_dir, holder["state"], i + 1))
+                        else:
+                            ckpt.save(tc.ckpt_dir, holder["state"], i + 1)
                 else:
-                    ckpt.save(tc.ckpt_dir, host, i + 1)
+                    host = jax.tree_util.tree_map(np.asarray, holder["state"])
+                    if tc.async_ckpt:
+                        self._ckpt_threads.append(
+                            ckpt.async_save(tc.ckpt_dir, host, i + 1))
+                    else:
+                        ckpt.save(tc.ckpt_dir, host, i + 1)
             # the paper's wavefront pattern: this task satisfies the next
             # step task's pre-slot via the §4 labeled map
             if idx + 1 < num_steps:

@@ -1,0 +1,277 @@
+"""§5 async IO queue: grant deferral, read-ahead overlap, write-back
+coalescing, write-only chunks, crash semantics, §6-partition write-back.
+
+``REPRO_IO_LATENCY`` sweeps the per-chunk latency (CI runs 0 and 1.0);
+tests whose assertion *requires* a nonzero latency pin their own.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import DbMode, NULL_GUID, Runtime, spawn_main
+
+L = float(os.environ.get("REPRO_IO_LATENCY", "1.0"))
+
+
+def _write_file(path, n=64):
+    data = np.arange(n, dtype=np.uint8)
+    data.tofile(path)
+    return data
+
+
+def test_grant_defers_until_read_lands(tmp_path):
+    """A task acquiring a lazy chunk runs only after open + read."""
+    path = str(tmp_path / "f.bin")
+    data = _write_file(path)
+    rt = Runtime(io_latency=L)
+    seen = {}
+
+    def reader(paramv, depv, api):
+        seen["t"] = api.rt.clock
+        seen["data"] = bytes(depv[0].ptr)
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            c = api2.file_get_chunk(fg, 0, 64)
+            api2.file_release(fg)
+            tmpl2 = api2.edt_template_create(reader, 0, 1)
+            api2.edt_create(tmpl2, depv=[c], dep_modes=[DbMode.RO])
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert seen["data"] == data.tobytes()
+    assert seen["t"] >= 2 * L          # open latency + queued chunk read
+    assert stats.io_read_ops == 1
+    assert stats.file_bytes_read == 64
+
+
+def _scan(io_mode, io_latency, chunks=16, duration=3.0, tmp_path=None):
+    """Chained scan: task i consumes chunk i and feeds task i+1."""
+    path = str(tmp_path / f"scan_{io_mode}.bin")
+    nbytes = 1 << 12
+    np.arange(nbytes // 4, dtype=np.uint32).tofile(path)
+    rt = Runtime(num_nodes=2, io_latency=io_latency, io_mode=io_mode)
+    per = nbytes // chunks
+    acc = {"v": 0}
+
+    def work(paramv, depv, api):
+        acc["v"] += int(depv[0].ptr.view(np.uint32).sum())
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            tmpl2 = api2.edt_template_create(work, 0, 2)
+            prev = None
+            for c in range(chunks):
+                ch = api2.file_get_chunk(fg, c * per, per)
+                depv2 = [ch, prev if prev is not None else NULL_GUID]
+                _, ev = api2.edt_create(
+                    tmpl2, depv=depv2, dep_modes=[DbMode.RO, DbMode.NULL],
+                    duration=duration, output_event=True)
+                prev = ev
+            api2.file_release(fg)
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    expect = int(np.arange(nbytes // 4, dtype=np.uint64).sum())
+    return stats, acc["v"] == expect
+
+
+def test_async_overlap_beats_sync_baseline(tmp_path):
+    """Read-ahead must strictly beat the blocking per-chunk baseline."""
+    sync_stats, ok_s = _scan("sync", 2.0, tmp_path=tmp_path)
+    async_stats, ok_a = _scan("async", 2.0, tmp_path=tmp_path)
+    assert ok_s and ok_a
+    assert async_stats.makespan < sync_stats.makespan
+    assert async_stats.io_overlap_ticks > 0
+    # read-ahead streams every chunk before the chain consumes them
+    assert async_stats.io_reads_inflight_max > 1
+
+
+def test_env_latency_scan_consistency(tmp_path):
+    """At the swept latency both modes stay correct; async never loses."""
+    sync_stats, ok_s = _scan("sync", L, tmp_path=tmp_path)
+    async_stats, ok_a = _scan("async", L, tmp_path=tmp_path)
+    assert ok_s and ok_a
+    assert async_stats.makespan <= sync_stats.makespan
+    if L == 0:
+        assert async_stats.makespan == sync_stats.makespan
+
+
+def test_adjacent_writebacks_coalesce(tmp_path):
+    """Same-timestamp destroys of adjacent dirty chunks merge to one op."""
+    path = str(tmp_path / "f.bin")
+    rt = Runtime(io_latency=L)
+    n, per = 4, 16
+
+    def w(paramv, depv, api):
+        depv[0].ptr[:] = paramv[0]
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "wb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            tmpl2 = api2.edt_template_create(w, 1, 1)
+            for c in range(n):
+                ch = api2.file_get_chunk(fg, c * per, per, write_only=True)
+                api2.edt_create(tmpl2, paramv=[c + 1], depv=[ch],
+                                dep_modes=[DbMode.EW])
+            api2.file_release(fg)
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.io_write_ops == 1
+    assert stats.io_coalesced_writes == n - 1
+    assert stats.file_bytes_written == n * per
+    got = np.fromfile(path, np.uint8)
+    expect = np.repeat(np.arange(1, n + 1, dtype=np.uint8), per)
+    assert np.array_equal(got, expect)
+
+
+def test_write_only_chunk_skips_read(tmp_path):
+    """A write-only chunk of a non-empty file charges no read op."""
+    path = str(tmp_path / "f.bin")
+    _write_file(path)
+    rt = Runtime(io_latency=L)
+
+    def w(paramv, depv, api):
+        depv[0].ptr[:] = 9
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            ch = api2.file_get_chunk(fg, 0, 32, write_only=True)
+            api2.file_release(fg)
+            tmpl2 = api2.edt_template_create(w, 0, 1)
+            api2.edt_create(tmpl2, depv=[ch], dep_modes=[DbMode.EW])
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.io_read_ops == 0
+    assert stats.file_bytes_read == 0
+    got = np.fromfile(path, np.uint8)
+    assert np.all(got[:32] == 9) and np.all(got[32:] == np.arange(32, 64))
+
+
+def test_killed_node_loses_inflight_writes(tmp_path):
+    """Write-backs in flight on a fail-stopped node never reach disk."""
+    path = str(tmp_path / "f.bin")
+    _write_file(path)
+    rt = Runtime(num_nodes=2, io_latency=4.0)
+
+    def w(paramv, depv, api):
+        # the writer node creates + writes + destroys its own chunk, so
+        # the write-back rides node 1's IO queue
+        fg = api.rt.file_registry[0]
+        ch = api.file_get_chunk(fg, 0, 32, write_only=True)
+        db = api.rt.lookup(ch)
+        api.rt._materialize(db)[:] = 7
+        db.dirty = True
+        api.db_destroy(ch)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "rb+")
+
+        def after(pv, dv, api2):
+            tmpl2 = api2.edt_template_create(w, 0, 0)
+            api2.edt_create(tmpl2, depv=[], placement=1)
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    # run past the destroy (write enqueued) but not to its completion,
+    # then fail-stop the writer's node: the MIoDone is dropped
+    rt.run(until=rt.io_latency + 2.5)
+    rt.kill_node(1)
+    stats = rt.run()
+    assert stats.file_bytes_written == 0
+    assert np.array_equal(np.fromfile(path, np.uint8),
+                          np.arange(64, dtype=np.uint8))
+
+
+def test_partition_children_write_back_own_ranges(tmp_path):
+    """§6 partitions of a file-mapped chunk write exactly their ranges."""
+    path = str(tmp_path / "f.bin")
+    rt = Runtime(io_latency=L)
+    parts = [(0, 16), (16, 16), (32, 32)]
+
+    def w(paramv, depv, api):
+        depv[0].ptr[:] = paramv[0]
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "wb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            chunk = api2.file_get_chunk(fg, 0, 64, write_only=True)
+            children = api2.db_partition(chunk, parts)
+            tmpl2 = api2.edt_template_create(w, 1, 1)
+            for i, child in enumerate(children):
+                api2.edt_create(tmpl2, paramv=[i + 1], depv=[child],
+                                dep_modes=[DbMode.EW])
+            api2.db_destroy(chunk)      # deferred until children retire
+            api2.file_release(fg)
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    # the three children retire together: adjacent ranges coalesce
+    assert stats.file_bytes_written == 64
+    assert stats.io_write_ops == 1
+    assert stats.io_coalesced_writes == 2
+    got = np.fromfile(path, np.uint8)
+    expect = np.concatenate([np.full(s, i + 1, np.uint8)
+                             for i, (_o, s) in enumerate(parts)])
+    assert np.array_equal(got, expect)
+
+
+def test_sync_mode_rejects_unknown(tmp_path):
+    with pytest.raises(ValueError):
+        Runtime(io_mode="turbo")
