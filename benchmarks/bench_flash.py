@@ -1,0 +1,104 @@
+"""Differentiable flash attention: Pallas kernels vs the jnp twin.
+
+Times forward and backward (fwd+bwd of a scalar loss) through
+``repro.kernels.flash_attention`` — the custom-VJP Pallas path (interpret
+mode on CPU, compiled on TPU) — against ``flash_attention_jnp``, the
+blockwise jnp oracle the training path used before the backward kernels
+existed.  Wall-clock only (no virtual time here), so the JSON keys use the
+``*_ms`` loose-threshold convention of ``scripts/bench_diff.py``.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models.attention import flash_attention_jnp
+
+B, S, H, KH, HD = 1, 256, 4, 2, 32
+BQ = BK = 64
+WINDOW = 48
+
+
+def _data():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, HD))
+    k = jax.random.normal(ks[1], (B, S, KH, HD))
+    v = jax.random.normal(ks[2], (B, S, KH, HD))
+    return q, k, v
+
+
+def _time_ms(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))            # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e3
+
+
+def _bench(window: int):
+    q, k, v = _data()
+
+    def fwd_pallas(q_, k_, v_):
+        return kops.flash_attention(q_, k_, v_, causal=True, window=window,
+                                    block_q=BQ, block_k=BK)
+
+    def fwd_jnp(q_, k_, v_):
+        return flash_attention_jnp(q_, k_, v_, jnp.zeros((), jnp.float32),
+                                   True, window, BQ, BK)
+
+    grad_pallas = jax.jit(jax.grad(
+        lambda q_, k_, v_: jnp.sum(fwd_pallas(q_, k_, v_)),
+        argnums=(0, 1, 2)))
+    grad_jnp = jax.jit(jax.grad(
+        lambda q_, k_, v_: jnp.sum(fwd_jnp(q_, k_, v_)),
+        argnums=(0, 1, 2)))
+
+    return {
+        "fwd_pallas_ms": _time_ms(fwd_pallas, q, k, v),
+        "fwd_jnp_ms": _time_ms(fwd_jnp, q, k, v),
+        "bwd_pallas_ms": _time_ms(grad_pallas, q, k, v),
+        "bwd_jnp_ms": _time_ms(grad_jnp, q, k, v),
+    }
+
+
+_CACHE = {}
+
+
+def _results():
+    if not _CACHE:
+        t0 = time.perf_counter()
+        _CACHE["causal"] = _bench(0)
+        _CACHE["window"] = _bench(WINDOW)
+        _CACHE["wall_time_s"] = time.perf_counter() - t0
+    return _CACHE
+
+
+def run():
+    res = _results()
+    rows = []
+    mode = "interpret" if jax.default_backend() != "tpu" else "compiled"
+    for variant in ("causal", "window"):
+        w = WINDOW if variant == "window" else 0
+        for key, ms in res[variant].items():
+            rows.append((f"flash.{variant}_{key[:-3]}", f"{ms * 1e3:.0f}",
+                         f"{mode}; B={B} S={S} H={H}/{KH} bq={BQ} "
+                         f"bk={BK} window={w}"))
+    return rows
+
+
+def summary():
+    """Machine-readable snapshot for BENCH_flash.json (perf trajectory)."""
+    res = _results()
+    out = {"seq": S, "heads": H, "kv_heads": KH, "block_q": BQ,
+           "block_k": BK, "window": WINDOW,
+           "wall_time_s": res["wall_time_s"]}
+    for variant in ("causal", "window"):
+        for key, ms in res[variant].items():
+            out[f"{variant}_{key}"] = ms
+    return out
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

@@ -53,21 +53,35 @@ def main() -> None:
 
     warnings = []
     compared = 0
-    for old_path in sorted(glob.glob(os.path.join(args.old, "BENCH_*.json"))):
-        name = os.path.basename(old_path)
+    old_names = {os.path.basename(p) for p in
+                 glob.glob(os.path.join(args.old, "BENCH_*.json"))}
+    new_names = {os.path.basename(p) for p in
+                 glob.glob(os.path.join(args.new, "BENCH_*.json"))}
+    for name in sorted(old_names):
         new_path = os.path.join(args.new, name)
-        if not os.path.exists(new_path):
+        if name not in new_names:
             print(f"::warning::bench_diff: {name} missing from fresh run")
             continue
-        with open(old_path) as f:
+        with open(os.path.join(args.old, name)) as f:
             old = json.load(f)
         with open(new_path) as f:
             new = json.load(f)
         compared += 1
         warnings.extend(compare(old, new, name))
 
+    # a fresh section with no committed snapshot is NOT silently skipped:
+    # a newly added bench must enter the perf trajectory, so the unmatched
+    # sections are listed fail-soft until their snapshot is committed
+    unmatched = sorted(new_names - old_names)
+    for name in unmatched:
+        print(f"::warning::bench_diff: {name} has no snapshot in "
+              f"{args.old} — commit one so the new section joins the "
+              f"perf trajectory")
+
     print(f"bench_diff: compared {compared} snapshot(s), "
-          f"{len(warnings)} regression(s)")
+          f"{len(warnings)} regression(s), {len(unmatched)} "
+          f"section(s) without a snapshot"
+          + (f" ({', '.join(unmatched)})" if unmatched else ""))
     for w in warnings:
         print(f"::warning::{w}")
         print(f"  {w}", file=sys.stderr)

@@ -72,8 +72,9 @@ class ModelConfig:
     optimizer_state_dtype: str = "float32"   # float32 | int8 (≥100B configs)
     loss_chunk: int = 1024           # sequence-chunked CE loss
     train_accum_steps: int = 1       # gradient accumulation microbatches
-    attn_block_q: int = 512          # blockwise-attention tile sizes (jnp path)
+    attn_block_q: int = 512          # flash-attention tile sizes
     attn_block_k: int = 1024
+    attn_flash_min_seq: int = 2048   # below max(2·block_q, this): dense ref
     use_scan: bool = True            # lax.scan over layers (compile scalability)
     pure_dp: bool = False            # small models: batch over ALL mesh axes,
     #                                  weights replicated (no TP/SP/FSDP)

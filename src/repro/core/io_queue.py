@@ -20,7 +20,12 @@ Model
   virtual timestamp and flush together, coalescing *adjacent* dirty ranges
   of one file on one node into a single disk operation — m chunk
   write-backs pay one ``io_latency`` instead of m
-  (``Stats.io_coalesced_writes`` counts the absorbed chunks).
+  (``Stats.io_coalesced_writes`` counts the absorbed chunks).  An
+  *elevator pass* extends the coalescing window past the timestamp: a
+  flushed range adjacent to a *queued-but-unstarted* write op of the same
+  (node, file) merges into that op instead of paying its own
+  ``io_latency`` — staggered write-backs under disk backlog coalesce the
+  same way an IO elevator absorbs requests into its pending sweep.
 * The **real** OS read/write happens when the completion is delivered, so
   a fail-stopped node (``kill_node``) or a halted run (``run(until)``)
   loses exactly the in-flight operations — the crash semantics the
@@ -75,6 +80,9 @@ class IoQueue:
         # timestamp flush together (mirrors the §6.3 copy batching)
         self._write_buffer: List[IoOp] = []
         self._flush_scheduled = False
+        # elevator pass: submitted write ops whose disk slot hasn't started
+        # yet, indexed by (node, path) — later flushes merge into them
+        self._pending_writes: Dict[Tuple[int, str], List[IoOp]] = {}
         self.inflight = 0                 # ops submitted, completion not seen
         self.reads_inflight = 0
 
@@ -101,6 +109,9 @@ class IoQueue:
         else:
             self.rt.stats.io_write_ops += 1
         self.rt.send(MIoDone(op=op), op.node, op.node, at=done)
+        if op.kind == "write" and not op.performed:
+            self._pending_writes.setdefault((op.node, op.path),
+                                            []).append(op)
         return done
 
     def complete(self, op: IoOp) -> None:
@@ -108,6 +119,13 @@ class IoQueue:
         self.inflight = max(0, self.inflight - 1)
         if op.kind == "read":
             self.reads_inflight = max(0, self.reads_inflight - 1)
+        else:
+            pend = self._pending_writes.get((op.node, op.path))
+            if pend is not None:
+                if op in pend:
+                    pend.remove(op)
+                if not pend:
+                    del self._pending_writes[(op.node, op.path)]
 
     # --------------------------------------------------------------- reads
 
@@ -135,12 +153,55 @@ class IoQueue:
                            (self.rt.clock if at is None else at,
                             next(self.rt._tick), "io_flush", None))
 
+    def _elevator_merge(self, op: IoOp) -> bool:
+        """Absorb ``op`` into a queued-but-unstarted write of the same
+        (node, file) when the ranges are adjacent (ROADMAP
+        "cross-timestamp write coalescing").
+
+        Only ops whose disk slot is strictly in the future are candidates:
+        an op with ``start <= now`` is already on the platter.  The merged
+        op's completion is untouched — the absorbed chunks ride the
+        already-charged ``io_latency``, exactly like same-timestamp
+        coalescing, and count in ``Stats.io_coalesced_writes``.
+
+        Ordering hazard (the same class the §6.3 copy batching replays
+        sequentially): if any pending write op overlaps ``op``'s range —
+        a re-written chunk whose stale write-back is still queued — the
+        newest payload must land *last*, so ``op`` takes a fresh disk
+        slot (FIFO per node puts it behind every queued op) instead of
+        riding an earlier one.
+        """
+        now = self.rt.clock
+        pend = self._pending_writes.get((op.node, op.path), ())
+        for prior in pend:
+            if prior.offset < op.offset + op.size and \
+                    op.offset < prior.offset + prior.size:
+                return False
+        for prior in pend:
+            if prior.performed or prior.data is None or prior.start <= now:
+                continue
+            if op.offset == prior.offset + prior.size:
+                prior.data = prior.data + (op.data or b"")
+            elif op.offset + op.size == prior.offset:
+                prior.data = (op.data or b"") + prior.data
+                prior.offset = op.offset
+            else:
+                continue
+            prior.size += op.size
+            prior.chunks += op.chunks
+            self.rt.stats.io_coalesced_writes += op.chunks
+            return True
+        return False
+
     def flush_writes(self) -> None:
         """Coalesce the buffered write-backs and put them on the disks.
 
         Ranges are adjacent-merged per ``(node, path)``: §5 chunks of one
         file never overlap, so a sorted linear sweep suffices, and the
-        merged payload is the concatenation in offset order.
+        merged payload is the concatenation in offset order.  A merged run
+        then takes the elevator: if it is adjacent to a queued-but-
+        unstarted write op from an earlier timestamp it joins that op
+        instead of occupying its own disk slot.
         """
         buf, self._write_buffer = self._write_buffer, []
         self._flush_scheduled = False
@@ -159,9 +220,11 @@ class IoQueue:
                     merged.chunks += op.chunks
                     self.rt.stats.io_coalesced_writes += op.chunks
                 else:
-                    self._submit(merged, self.rt.clock)
+                    if not self._elevator_merge(merged):
+                        self._submit(merged, self.rt.clock)
                     merged = op
-            self._submit(merged, self.rt.clock)
+            if not self._elevator_merge(merged):
+                self._submit(merged, self.rt.clock)
 
     # ---------------------------------------------------------- sync mode
 

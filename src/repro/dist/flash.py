@@ -15,9 +15,10 @@ mention the mesh:
   softmax over its §6 stripe of the cache and the partials combine with a
   global max + psum (the log-sum-exp trick), two scalarish collectives.
 * **single device** — no mesh (or ``pure_dp``): the existing kernels.
-  Training paths use the differentiable jnp flash twin
-  (``flash_attention_jnp``); the decode hot path routes to the Pallas
-  kernels (``repro.kernels``) on a TPU backend.
+  Long-sequence training/prefill runs the differentiable Pallas flash
+  kernel (custom-VJP backward kernels; compiled on TPU, interpret mode
+  on CPU); the decode hot path routes to the Pallas flash-decode kernel
+  on a TPU backend.
 
 The §6 reading: a decode cache is one data block; the sequence stripes the
 lse-combine path walks are exactly the disjoint EW partitions
@@ -32,28 +33,33 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.models.attention import (decode_attention, flash_attention_jnp,
+from repro.kernels import ops as kernel_ops
+from repro.models.attention import (decode_attention, flash_min_seq,
                                     full_attention)
 from .sharding import ShardCtx, current_ctx, shard_map
 
 NEG_INF = -1e30
 
 
-def _blocks(cfg) -> Tuple[int, int]:
+def _blocks(cfg) -> Tuple[int, int, int]:
     return (getattr(cfg, "attn_block_q", 512) or 512,
-            getattr(cfg, "attn_block_k", 1024) or 1024)
+            getattr(cfg, "attn_block_k", 1024) or 1024,
+            flash_min_seq(cfg))
 
 
 def _attn_local(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
-                block_q: int, block_k: int, q_offset=0) -> jax.Array:
-    """Single-shard causal attention: flash twin for long sequences (O(S)
-    memory + custom O(S) backward), dense reference for short ones."""
-    sq, sk = q.shape[1], k.shape[1]
-    if sq > max(2 * block_q, 2048) and sq % block_q == 0 \
-            and sk % block_k == 0:
-        return flash_attention_jnp(
+                block_q: int, block_k: int, min_seq: int = 2048,
+                q_offset=0) -> jax.Array:
+    """Single-shard causal attention: the differentiable Pallas flash
+    kernel for long sequences (O(S) memory, custom-VJP backward kernels —
+    training and inference take the same path), dense reference for short
+    ones.  Ragged sequence lengths are edge-padded inside the kernel, so
+    the flash branch is purely length-thresholded."""
+    sq = q.shape[1]
+    if sq > min_seq:
+        return kernel_ops.flash_attention(
             q, k, v, jnp.asarray(q_offset).astype(jnp.float32),
-            True, window, block_q, block_k)
+            causal=True, window=window, block_q=block_q, block_k=block_k)
     return full_attention(q, k, v, causal=True, window=window,
                           q_offset=q_offset)
 
@@ -68,10 +74,11 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, cfg=None,
     b, s, h, _ = q.shape
     kh = k.shape[2]
     m = ctx.model_size
-    bq, bk = _blocks(cfg)
+    bq, bk, min_seq = _blocks(cfg)
 
     if not ctx.active or ctx.pure_dp or m <= 1:
-        return _attn_local(q, k, v, window=window, block_q=bq, block_k=bk)
+        return _attn_local(q, k, v, window=window, block_q=bq, block_k=bk,
+                           min_seq=min_seq)
 
     dp = ctx.resolve("dp", b)
     if h % m == 0 and kh % m == 0:
@@ -80,14 +87,15 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, cfg=None,
 
         def inner(ql, kl, vl):
             return _attn_local(ql, kl, vl, window=window,
-                               block_q=bq, block_k=bk)
+                               block_q=bq, block_k=bk, min_seq=min_seq)
 
         return shard_map(inner, ctx.mesh, in_specs=(spec, spec, spec),
                          out_specs=spec)(q, k, v)
 
     if s % m == 0:
         # context-parallel: q stripes over "model", k/v whole; q_offset
-        # keeps each stripe's causal mask globally positioned
+        # keeps each stripe's causal mask globally positioned — through
+        # the Pallas kernel's scalar-prefetched offset in fwd AND bwd
         chunk = s // m
         qspec = P(dp, "model", None, None)
         kvspec = P(dp, None, None, None)
@@ -95,12 +103,13 @@ def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array, *, cfg=None,
         def inner(ql, kl, vl):
             off = jax.lax.axis_index("model") * chunk
             return _attn_local(ql, kl, vl, window=window, block_q=bq,
-                               block_k=bk, q_offset=off)
+                               block_k=bk, min_seq=min_seq, q_offset=off)
 
         return shard_map(inner, ctx.mesh, in_specs=(qspec, kvspec, kvspec),
                          out_specs=qspec)(q, k, v)
 
-    return _attn_local(q, k, v, window=window, block_q=bq, block_k=bk)
+    return _attn_local(q, k, v, window=window, block_q=bq, block_k=bk,
+                       min_seq=min_seq)
 
 
 # ------------------------------------------------------------------- decode

@@ -1,4 +1,4 @@
-"""Pallas TPU flash attention (causal, GQA, optional sliding window).
+"""Pallas TPU flash attention (causal, GQA, sliding window) — differentiable.
 
 TPU adaptation of the paper's §6 data-block partitioning at the memory
 hierarchy: the (S × S) attention computation is partitioned into disjoint
@@ -8,17 +8,35 @@ lives in VMEM scratch and persists across the sequential innermost grid
 dimension (TPU grids execute in order), exactly the inter-chunk state carry
 pattern the paper expresses with partitions + events.
 
+Three kernels, wired through ``jax.custom_vjp`` so the *training* path runs
+on Pallas too (ROADMAP "Differentiable Pallas flash attention"):
+
+* ``_fwd_kernel`` — forward; optionally emits the per-row logsumexp
+  residual alongside the output (only the differentiated path pays for it).
+* ``_bwd_dq_kernel`` — dq pass: grid (B, H, nq, nk), nk innermost, dq
+  accumulated in VMEM scratch from the saved lse + delta.
+* ``_bwd_dkv_kernel`` — dk/dv pass: grid (B, KH, nk, G, nq) with the
+  (group, q-block) reduction innermost, so the GQA head-group sum lands in
+  the same VMEM scratch carry — no (B, H, S, hd)-sized dk staging.
+
+All three take the global ``q_offset`` as a scalar-prefetch operand (the
+context-parallel stripe origin under ``repro.dist.flash``'s shard_map —
+a traced ``axis_index`` product), so the causal/window masks and the
+block-level ``pl.when`` skips stay globally positioned in both directions.
+
 Layouts (chosen for MXU alignment):
   q:    (B, H, S, hd)      k, v: (B, KH, S, hd)
   out:  (B, H, S, hd)
 Grid: (B, H, nq, nk), nk innermost (reduction).  Causal tiles with
 j·bk > (i+1)·bq are skipped with ``pl.when`` — no wasted MXU work, unlike
-the masked jnp oracle (see EXPERIMENTS.md §Perf).
+the masked jnp oracle (see EXPERIMENTS.md §Perf).  Sequence lengths that
+do not divide the block sizes are zero-padded at the edge and masked via
+the static ``kv_len`` bound (the §6 masked-edge-tile treatment
+``multi_partition_copy`` uses for ragged ranges).
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,11 +52,55 @@ _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  block_q: int, block_k: int, num_kv_blocks: int,
-                  causal: bool, window: int, scale: float):
+def _tile_mask(q_start, k_start: int, block_q: int, block_k: int,
+               causal: bool, window: int, kv_len: int, sk_padded: int):
+    """(block_q, block_k) boolean mask for one tile, or None when every
+    element is live.  ``q_start`` is the tile's *global* first row (traced:
+    it includes the scalar-prefetched stripe offset)."""
+    if not (causal or window > 0 or kv_len < sk_padded):
+        return None
+    rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 0)
+    cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                              (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = cols <= rows
+    if window > 0:
+        mask = jnp.logical_and(mask, rows - cols < window)
+    if kv_len < sk_padded:
+        mask = jnp.logical_and(mask, cols < kv_len)
+    return mask
+
+
+def _tile_run(q_start, k_start: int, block_q: int, block_k: int,
+              causal: bool, window: int, kv_len: int, sk_padded: int):
+    """Block-level ``pl.when`` predicate: False only if the whole tile is
+    provably masked (the §6 tile-skip — no wasted MXU work)."""
+    run = jnp.bool_(True)
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window > 0:
+        run = jnp.logical_and(run,
+                              q_start - (k_start + block_k - 1) < window)
+    if kv_len < sk_padded:
+        run = jnp.logical_and(run, jnp.bool_(k_start < kv_len))
+    return run
+
+
+# ---------------------------------------------------------------- forward
+
+def _fwd_kernel(off_ref, q_ref, k_ref, v_ref, o_ref, *rest,
+                block_q: int, block_k: int, num_kv_blocks: int,
+                causal: bool, window: int, scale: float, kv_len: int,
+                with_lse: bool):
+    if with_lse:
+        lse_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        lse_ref, (m_ref, l_ref, acc_ref) = None, rest
     i = pl.program_id(2)
     j = pl.program_id(3)
+    sk_padded = num_kv_blocks * block_k
 
     @pl.when(j == 0)
     def _init():
@@ -46,15 +108,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q_start = i * block_q
+    q_start = i * block_q + off_ref[0]          # global row of tile row 0
     k_start = j * block_k
 
-    # causal block-level skip: tile strictly above the diagonal
-    run = jnp.bool_(True)
-    if causal:
-        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
-    if window > 0:
-        run = jnp.logical_and(run, q_start - (k_start + block_k - 1) < window)
+    run = _tile_run(q_start, k_start, block_q, block_k, causal, window,
+                    kv_len, sk_padded)
 
     @pl.when(run)
     def _compute():
@@ -64,19 +122,19 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         s = s * scale                                   # (bq, bk)
-        if causal or window > 0:
-            rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                      (block_q, block_k), 0)
-            cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                      (block_q, block_k), 1)
-            mask = cols <= rows
-            if window > 0:
-                mask = jnp.logical_and(mask, rows - cols < window)
+        mask = _tile_mask(q_start, k_start, block_q, block_k, causal,
+                          window, kv_len, sk_padded)
+        if mask is not None:
             s = jnp.where(mask, s, NEG_INF)
         m_prev = m_ref[...]
         l_prev = l_ref[...]
         m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
         p = jnp.exp(s - m_new)
+        if mask is not None:
+            # a fully-masked row in a live tile would otherwise contribute
+            # exp(NEG_INF − NEG_INF) = 1 per element while m is still the
+            # init value — zero the masked lanes explicitly
+            p = jnp.where(mask, p, 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_new = l_prev * alpha + p.sum(axis=1, keepdims=True)
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -89,49 +147,328 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _finalize():
         l = jnp.maximum(l_ref[...], 1e-37)
         o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        if with_lse:
+            lse_ref[0, 0] = (m_ref[...] + jnp.log(l))[:, 0]
 
 
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: bool = False) -> jax.Array:
-    """q: (B, H, S, hd); k, v: (B, KH, S, hd) → (B, H, S, hd)."""
+def _fwd_call(q, k, v, offs, *, causal: bool, window: int, block_q: int,
+              block_k: int, kv_len: int, interpret: bool, with_lse: bool):
     b, h, sq, hd = q.shape
     _, kh, sk, _ = k.shape
     hd_v = v.shape[-1]
     g = h // kh
-    block_q = min(block_q, sq)
-    block_k = min(block_k, sk)
-    assert sq % block_q == 0 and sk % block_k == 0
     nq, nk = sq // block_q, sk // block_k
     scale = 1.0 / np.sqrt(hd)
 
-    grid = (b, h, nq, nk)
     kernel = functools.partial(
-        _flash_kernel, block_q=block_q, block_k=block_k, num_kv_blocks=nk,
-        causal=causal, window=window, scale=scale)
+        _fwd_kernel, block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        causal=causal, window=window, scale=scale, kv_len=kv_len,
+        with_lse=with_lse)
+    out_shape = [jax.ShapeDtypeStruct((b, h, sq, hd_v), q.dtype)]
+    out_specs = [pl.BlockSpec((1, 1, block_q, hd_v),
+                              lambda bb, hh, ii, jj, off: (bb, hh, ii, 0))]
+    if with_lse:
+        out_shape.append(jax.ShapeDtypeStruct((b, h, sq), jnp.float32))
+        out_specs.append(pl.BlockSpec(
+            (1, 1, block_q), lambda bb, hh, ii, jj, off: (bb, hh, ii)))
 
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, h, nq, nk),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, hd),
-                         lambda bb, hh, ii, jj: (bb, hh, ii, 0)),
+                         lambda bb, hh, ii, jj, off: (bb, hh, ii, 0)),
             pl.BlockSpec((1, 1, block_k, hd),
-                         lambda bb, hh, ii, jj: (bb, hh // g, jj, 0)),
+                         lambda bb, hh, ii, jj, off: (bb, hh // g, jj, 0)),
             pl.BlockSpec((1, 1, block_k, hd_v),
-                         lambda bb, hh, ii, jj: (bb, hh // g, jj, 0)),
+                         lambda bb, hh, ii, jj, off: (bb, hh // g, jj, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, block_q, hd_v),
-                               lambda bb, hh, ii, jj: (bb, hh, ii, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd_v), q.dtype),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, hd_v), jnp.float32),
         ],
+    )
+    res = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
         compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
-    )(q, k, v)
+    )(offs, q, k, v)
+    return (res[0], res[1]) if with_lse else (res[0], None)
+
+
+# --------------------------------------------------------------- backward
+
+def _bwd_dq_kernel(off_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                   dq_ref, dq_acc, *, block_q: int, block_k: int,
+                   num_kv_blocks: int, causal: bool, window: int,
+                   scale: float, kv_len: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    sk_padded = num_kv_blocks * block_k
+
+    @pl.when(j == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    q_start = i * block_q + off_ref[0]
+    k_start = j * block_k
+    run = _tile_run(q_start, k_start, block_q, block_k, causal, window,
+                    kv_len, sk_padded)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd_v)
+        do = do_ref[0, 0].astype(jnp.float32)          # (bq, hd_v)
+        lse = lse_ref[0, 0].reshape(block_q, 1)
+        delta = delta_ref[0, 0].reshape(block_q, 1)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _tile_mask(q_start, k_start, block_q, block_k, causal,
+                          window, kv_len, sk_padded)
+        p = jnp.exp(s - lse)                           # (bq, bk)
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        dq_acc[...] += jax.lax.dot_general(
+            ds, k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == num_kv_blocks - 1)
+    def _finalize():
+        dq_ref[0, 0] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(off_ref, q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *, block_q: int,
+                    block_k: int, num_q_blocks: int, num_groups: int,
+                    causal: bool, window: int, scale: float, kv_len: int,
+                    sk_padded: int):
+    j = pl.program_id(2)                               # k block
+    gg = pl.program_id(3)                              # head within group
+    i = pl.program_id(4)                               # q block
+
+    @pl.when(jnp.logical_and(gg == 0, i == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    q_start = i * block_q + off_ref[0]
+    k_start = j * block_k
+    run = _tile_run(q_start, k_start, block_q, block_k, causal, window,
+                    kv_len, sk_padded)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)            # (bk, hd_v)
+        do = do_ref[0, 0].astype(jnp.float32)          # (bq, hd_v)
+        lse = lse_ref[0, 0].reshape(block_q, 1)
+        delta = delta_ref[0, 0].reshape(block_q, 1)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _tile_mask(q_start, k_start, block_q, block_k, causal,
+                          window, kv_len, sk_padded)
+        p = jnp.exp(s - lse)                           # (bq, bk)
+        if mask is not None:
+            p = jnp.where(mask, p, 0.0)
+        # dv += pᵀ · do ; contraction over the q rows
+        dv_acc[...] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * scale
+        dk_acc[...] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(jnp.logical_and(gg == num_groups - 1, i == num_q_blocks - 1))
+    def _finalize():
+        dk_ref[0, 0] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_call(q, k, v, do, lse, delta, offs, *, causal: bool, window: int,
+              block_q: int, block_k: int, kv_len: int, interpret: bool):
+    b, h, sq, hd = q.shape
+    _, kh, sk, _ = k.shape
+    hd_v = v.shape[-1]
+    g = h // kh
+    nq, nk = sq // block_q, sk // block_k
+    scale = 1.0 / np.sqrt(hd)
+
+    # --- dq pass: grid (B, H, nq, nk), nk innermost reduction ------------
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        causal=causal, window=window, scale=scale, kv_len=kv_len)
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, h, nq, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, hd),
+                             lambda bb, hh, ii, jj, off: (bb, hh, ii, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda bb, hh, ii, jj, off:
+                             (bb, hh // g, jj, 0)),
+                pl.BlockSpec((1, 1, block_k, hd_v),
+                             lambda bb, hh, ii, jj, off:
+                             (bb, hh // g, jj, 0)),
+                pl.BlockSpec((1, 1, block_q, hd_v),
+                             lambda bb, hh, ii, jj, off: (bb, hh, ii, 0)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda bb, hh, ii, jj, off: (bb, hh, ii)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda bb, hh, ii, jj, off: (bb, hh, ii)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, 1, block_q, hd),
+                lambda bb, hh, ii, jj, off: (bb, hh, ii, 0)),
+            scratch_shapes=[pltpu.VMEM((block_q, hd), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, hd), q.dtype),
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(offs, q, k, v, do, lse, delta)
+
+    # --- dk/dv pass: grid (B, KH, nk, G, nq); the GQA group sum and the
+    # q-block reduction both ride the innermost sequential dims, so dk/dv
+    # accumulate per *kv* head directly in scratch ------------------------
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, block_q=block_q, block_k=block_k, num_q_blocks=nq,
+        num_groups=g, causal=causal, window=window, scale=scale,
+        kv_len=kv_len, sk_padded=nk * block_k)
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, kh, nk, g, nq),
+            in_specs=[
+                pl.BlockSpec((1, 1, block_q, hd),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk * g + gg, ii, 0)),
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk, jj, 0)),
+                pl.BlockSpec((1, 1, block_k, hd_v),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk, jj, 0)),
+                pl.BlockSpec((1, 1, block_q, hd_v),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk * g + gg, ii, 0)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk * g + gg, ii)),
+                pl.BlockSpec((1, 1, block_q),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk * g + gg, ii)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, block_k, hd),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk, jj, 0)),
+                pl.BlockSpec((1, 1, block_k, hd_v),
+                             lambda bb, hk, jj, gg, ii, off:
+                             (bb, hk, jj, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((block_k, hd), jnp.float32),
+                pltpu.VMEM((block_k, hd_v), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kh, sk, hd), k.dtype),
+            jax.ShapeDtypeStruct((b, kh, sk, hd_v), v.dtype),
+        ],
+        compiler_params=_COMPILER_PARAMS(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(offs, q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ------------------------------------------------------------- custom VJP
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
+def _flash(q, k, v, q_offset, causal, window, block_q, block_k, kv_len,
+           interpret):
+    """Primal (non-differentiated) call: no residual output."""
+    offs = jnp.reshape(q_offset.astype(jnp.int32), (1,))
+    out, _ = _fwd_call(q, k, v, offs, causal=causal, window=window,
+                       block_q=block_q, block_k=block_k, kv_len=kv_len,
+                       interpret=interpret, with_lse=False)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, q_offset, causal, window, block_q, block_k,
+                    kv_len, interpret):
+    offs = jnp.reshape(q_offset.astype(jnp.int32), (1,))
+    out, lse = _fwd_call(q, k, v, offs, causal=causal, window=window,
+                         block_q=block_q, block_k=block_k, kv_len=kv_len,
+                         interpret=interpret, with_lse=True)
+    return out, (q, k, v, out, lse, offs)
+
+
+def _flash_bwd_rule(causal, window, block_q, block_k, kv_len, interpret,
+                    res, do):
+    q, k, v, out, lse, offs = res
+    # delta_i = rowsum(do · out), elementwise on the unblocked arrays (see
+    # models.attention._flash_bwd for why not a blocked dot)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32),
+                    axis=-1)                            # (B, H, S)
+    dq, dk, dv = _bwd_call(q, k, v, do, lse, delta, offs, causal=causal,
+                           window=window, block_q=block_q, block_k=block_k,
+                           kv_len=kv_len, interpret=interpret)
+    return dq, dk, dv, jnp.zeros((), jnp.float32)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+# ----------------------------------------------------------------- public
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    q_offset=0.0, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, hd); k, v: (B, KH, S, hd) → (B, H, S, hd_v).
+
+    Differentiable: the backward runs the ``_bwd_dq`` / ``_bwd_dkv``
+    Pallas kernels from the saved logsumexp (O(S) memory), matching the
+    jnp twin (``models.attention.flash_attention_jnp``) to fp32 tolerance.
+
+    ``q_offset`` is the global position of q row 0 (a traced
+    ``axis_index`` product under context-parallel shard_map); its
+    cotangent is zero.  Sequence lengths need not divide the block sizes:
+    edges are zero-padded and masked like the forward's causal tiles.
+    """
+    b, h, sq, hd = q.shape
+    sk = k.shape[2]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    sq_p = -(-sq // block_q) * block_q
+    sk_p = -(-sk // block_k) * block_k
+    off = jnp.asarray(q_offset).astype(jnp.float32)
+    if sq_p != sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, sq_p - sq), (0, 0)))
+    if sk_p != sk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, sk_p - sk), (0, 0)))
+    out = _flash(q, k, v, off, causal, window, block_q, block_k, int(sk),
+                 interpret)
+    return out[:, :, :sq] if sq_p != sq else out

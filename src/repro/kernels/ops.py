@@ -25,16 +25,22 @@ def _default_interpret() -> bool:
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
-def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
-                    block_k=128, interpret=None):
-    """Model layout: q (B,S,H,hd), k/v (B,S,KH,hd) → (B,S,H,hd)."""
+def flash_attention(q, k, v, q_offset=0.0, *, causal=True, window=0,
+                    block_q=128, block_k=128, interpret=None):
+    """Model layout: q (B,S,H,hd), k/v (B,S,KH,hd) → (B,S,H,hd_v).
+
+    Differentiable (custom-VJP backward kernels); ``q_offset`` is the
+    global position of q row 0 under context-parallel stripes — a traced
+    operand, not a static argument, so shard_map `axis_index` products
+    trace through.
+    """
     interpret = _default_interpret() if interpret is None else interpret
     qt = jnp.transpose(q, (0, 2, 1, 3))
     kt = jnp.transpose(k, (0, 2, 1, 3))
     vt = jnp.transpose(v, (0, 2, 1, 3))
-    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
-                              block_q=block_q, block_k=block_k,
-                              interpret=interpret)
+    out = _fa.flash_attention(qt, kt, vt, q_offset, causal=causal,
+                              window=window, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
     return jnp.transpose(out, (0, 2, 1, 3))
 
 

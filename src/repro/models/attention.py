@@ -7,9 +7,11 @@ Layout conventions:
   kv cache     : dict(k=(B, S_max, K, hd), v=(B, S_max, K, hd))
   MLA cache    : dict(c_kv=(B, S_max, r), k_rope=(B, S_max, rd))
 
-The blockwise path is the sub-quadratic-memory jnp oracle of the Pallas
-flash kernel (`repro.kernels.flash_attention`); the dry-run lowers this
-path because TPU custom calls cannot lower on the CPU backend.
+Long-sequence training/prefill routes through ``flash_attention_train`` —
+the differentiable Pallas flash kernel (`repro.kernels.flash_attention`,
+custom-VJP backward kernels; compiled on TPU, interpret mode on CPU so the
+dry-run still lowers).  ``blockwise_attention`` / ``flash_attention_jnp``
+remain as the sub-quadratic jnp oracles the kernel gradchecks against.
 """
 from __future__ import annotations
 
@@ -298,6 +300,29 @@ def _flash_bwd(causal, window, block_q, block_k, res, do):
 flash_attention_jnp.defvjp(_flash_fwd, _flash_bwd)
 
 
+# --------------------------------------------- Pallas training dispatcher
+
+def flash_min_seq(cfg) -> int:
+    """Sequence length above which training/prefill attention goes flash."""
+    return max(2 * getattr(cfg, "attn_block_q", 512),
+               getattr(cfg, "attn_flash_min_seq", 2048) or 2048)
+
+
+def flash_attention_train(q, k, v, q_offset=0.0, *, causal=True, window=0,
+                          block_q=512, block_k=1024):
+    """Differentiable flash attention for training/prefill paths.
+
+    Runs the Pallas kernel with its custom-VJP backward kernels
+    (``repro.kernels.flash_attention``) — compiled on a TPU backend,
+    interpret mode elsewhere, so the same grid/mask arithmetic executes
+    on every backend (CPU parity is the TPU kernel's oracle).
+    """
+    from repro.kernels import ops as kernel_ops
+    return kernel_ops.flash_attention(q, k, v, q_offset, causal=causal,
+                                      window=window, block_q=block_q,
+                                      block_k=block_k)
+
+
 # ------------------------------------------------------------ decode attention
 
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
@@ -344,9 +369,10 @@ def gqa_train(params: Params, x: jax.Array, cfg, positions: jax.Array,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     seq = x.shape[1]
-    if seq > max(2 * cfg.attn_block_q, 2048):
-        out = blockwise_attention(q, k, v, causal=True, window=cfg.sliding_window,
-                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    if seq > flash_min_seq(cfg):
+        out = flash_attention_train(q, k, v, window=cfg.sliding_window,
+                                    block_q=cfg.attn_block_q,
+                                    block_k=cfg.attn_block_k)
     else:
         out = full_attention(q, k, v, causal=True, window=cfg.sliding_window)
     return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
@@ -360,9 +386,10 @@ def gqa_prefill(params: Params, x: jax.Array, cfg, positions: jax.Array,
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
     seq = x.shape[1]
-    if seq > max(2 * cfg.attn_block_q, 2048):
-        out = blockwise_attention(q, k, v, causal=True, window=cfg.sliding_window,
-                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    if seq > flash_min_seq(cfg):
+        out = flash_attention_train(q, k, v, window=cfg.sliding_window,
+                                    block_q=cfg.attn_block_q,
+                                    block_k=cfg.attn_block_k)
     else:
         out = full_attention(q, k, v, causal=True, window=cfg.sliding_window)
     o = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
@@ -464,9 +491,9 @@ def _mla_qkv_full(params: Params, x: jax.Array, cfg, positions: jax.Array):
 def mla_train(params: Params, x: jax.Array, cfg, positions: jax.Array) -> jax.Array:
     q, k, v, _, _ = _mla_qkv_full(params, x, cfg, positions)
     seq = x.shape[1]
-    if seq > max(2 * cfg.attn_block_q, 2048):
-        out = blockwise_attention(q, k, v, causal=True,
-                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    if seq > flash_min_seq(cfg):
+        out = flash_attention_train(q, k, v, block_q=cfg.attn_block_q,
+                                    block_k=cfg.attn_block_k)
     else:
         out = full_attention(q, k, v, causal=True)
     return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
@@ -476,9 +503,9 @@ def mla_prefill(params: Params, x: jax.Array, cfg, positions: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     q, k, v, c_kv, k_rope = _mla_qkv_full(params, x, cfg, positions)
     seq = x.shape[1]
-    if seq > max(2 * cfg.attn_block_q, 2048):
-        out = blockwise_attention(q, k, v, causal=True,
-                                  block_q=cfg.attn_block_q, block_k=cfg.attn_block_k)
+    if seq > flash_min_seq(cfg):
+        out = flash_attention_train(q, k, v, block_q=cfg.attn_block_q,
+                                    block_k=cfg.attn_block_k)
     else:
         out = full_attention(q, k, v, causal=True)
     o = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])

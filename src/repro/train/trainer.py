@@ -12,6 +12,12 @@ Fault tolerance: ``run`` stops cleanly at a simulated failure step; a new
 and — because the data pipeline is stateless-per-step — replays exactly the
 batches the lost steps would have seen (tested bit-exact in
 ``tests/test_trainer.py``).  A step-time watchdog flags stragglers.
+
+Attention in the jitted step routes through ``repro.dist.flash``: above
+``cfg.attn_flash_min_seq`` the differentiable Pallas flash kernel runs the
+forward *and* both backward passes (compiled on TPU, interpret mode on
+CPU), under ``use_mesh`` included — training no longer falls back to the
+jnp flash twin.
 """
 from __future__ import annotations
 

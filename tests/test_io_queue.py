@@ -272,6 +272,133 @@ def test_partition_children_write_back_own_ranges(tmp_path):
     assert np.array_equal(got, expect)
 
 
+def test_elevator_merges_into_queued_unstarted_write(tmp_path):
+    """Cross-timestamp coalescing: a write-back flushed while an adjacent
+    write op is still queued (disk backlogged, op unstarted) merges into
+    that op instead of paying its own ``io_latency`` — the elevator pass.
+
+    Timeline (io_latency 8): chunks 0 and 2 retire at t≈1 → two ops (not
+    adjacent); chunk 0's op starts immediately, chunk 2's queues behind
+    it.  Chunk 3 retires at t≈3, adjacent to the *queued* chunk-2 op →
+    absorbed.  Requires a nonzero latency, so the test pins its own.
+    """
+    path = str(tmp_path / "f.bin")
+    rt = Runtime(io_latency=8.0)
+    per = 16
+
+    def w(paramv, depv, api):
+        depv[0].ptr[:] = paramv[0]
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "wb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            tmpl2 = api2.edt_template_create(w, 1, 1)
+            for c, dur in ((0, 1.0), (2, 1.0), (3, 3.0)):
+                ch = api2.file_get_chunk(fg, c * per, per, write_only=True)
+                api2.edt_create(tmpl2, paramv=[c + 1], depv=[ch],
+                                dep_modes=[DbMode.EW], duration=dur)
+            api2.file_release(fg)
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    # chunks 0 and 2 each pay a disk slot; chunk 3 rides chunk 2's
+    assert stats.io_write_ops == 2
+    assert stats.io_coalesced_writes == 1
+    assert stats.file_bytes_written == 3 * per
+    got = np.fromfile(path, np.uint8)
+    expect = np.zeros(4 * per, np.uint8)
+    for c in (0, 2, 3):
+        expect[c * per:(c + 1) * per] = c + 1
+    assert np.array_equal(got, expect)
+
+
+def test_elevator_never_reorders_rewrite_past_stale_queued_op(tmp_path):
+    """A re-written chunk must not ride the elevator past its own stale
+    queued write-back: the new payload's op overlaps a pending op, so it
+    takes a fresh (later) disk slot and the newest bytes land last.
+
+    Timeline (io_latency 10): Z [96,112) occupies the disk; chunk2
+    [32,48) and chunk4 [64,80) (payload OLD) queue behind it at t≈1 as
+    two non-adjacent ops; chunk3 [48,64) retires at t≈2 and
+    elevator-merges into chunk2's op, growing it to [32,64) — adjacent to
+    chunk4.  At t≈3 chunk4 is re-acquired and destroyed with payload NEW:
+    without the overlap guard it would merge into the *earlier* grown op
+    and the stale [64,80) op would overwrite it at its later completion.
+    """
+    path = str(tmp_path / "f.bin")
+    rt = Runtime(io_latency=10.0)
+    per = 16
+    OLD, NEW = 7, 9
+
+    def w(paramv, depv, api):
+        depv[0].ptr[:] = paramv[0]
+        api.db_destroy(depv[0].guid)
+        return NULL_GUID
+
+    def delay(paramv, depv, api):
+        return NULL_GUID
+
+    def rewrite(paramv, depv, api):
+        # chunk4's first db was destroyed two event-hops ago
+        fg = api.rt.file_registry[0]
+        ch = api.file_get_chunk(fg, 4 * per, per, write_only=True)
+        db = api.rt.lookup(ch)
+        api.rt._materialize(db)[:] = NEW
+        db.dirty = True
+        api.db_destroy(ch)
+        api.file_release(fg)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "wb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            tmpl2 = api2.edt_template_create(w, 1, 1)
+            ev4 = None
+            for c, val, dur in ((6, 1, 0.5),       # Z: occupies the disk
+                                (2, 2, 1.0),
+                                (4, OLD, 1.0),
+                                (3, 3, 2.0)):      # merges into chunk2's op
+                ch = api2.file_get_chunk(fg, c * per, per, write_only=True)
+                _, ev = api2.edt_create(tmpl2, paramv=[val], depv=[ch],
+                                        dep_modes=[DbMode.EW], duration=dur,
+                                        output_event=True)
+                if c == 4:
+                    ev4 = ev
+            # rewrite runs one event-hop after chunk4's OLD write-back is
+            # enqueued (and after chunk3's elevator merge), while the
+            # stale op is still queued behind Z on the disk
+            tmpl_d = api2.edt_template_create(delay, 0, 1)
+            _, ev_d = api2.edt_create(tmpl_d, depv=[ev4],
+                                      dep_modes=[DbMode.NULL],
+                                      duration=1.5, output_event=True)
+            tmpl3 = api2.edt_template_create(rewrite, 0, 1)
+            api2.edt_create(tmpl3, depv=[ev_d], dep_modes=[DbMode.NULL])
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    got = np.fromfile(path, np.uint8)
+    # the rewrite's payload must win over the stale queued write-back
+    assert np.all(got[4 * per:5 * per] == NEW)
+    # chunk3 still coalesced into chunk2's queued op
+    assert stats.io_coalesced_writes >= 1
+
+
 def test_sync_mode_rejects_unknown(tmp_path):
     with pytest.raises(ValueError):
         Runtime(io_mode="turbo")
