@@ -1,0 +1,260 @@
+"""Sharded per-node GUID tables vs the flat-dict baseline (§2 storage).
+
+The paper's GUIDs carry ``(node, seq, kind)`` so the runtime can exploit
+creation-time structure; ``repro.core.objects.ObjectTable`` exploits it on
+the storage side — kind + seq-range shard routing is O(1) arithmetic on
+int keys, where a flat ``Dict[Guid, Any]`` hashes the triple and pays a
+Python-level ``Guid.__eq__`` on every probe of a *message-decoded*
+identifier (equal but not identical — the norm in a distributed runtime,
+where guids arrive over the wire).  Probes here are therefore freshly
+constructed Guids for both rows.
+
+Rows at 10⁴–10⁶ live objects:
+
+* ``create_nN`` — insert throughput (sharded routing is pure overhead
+  here, so the flat dict wins this row; the ratio shows the cost paid).
+* ``lookup_hot_nN`` — a 4 K hot working set probed over the full cold
+  table: the regime the ROADMAP's "millions of live objects" scenarios
+  live in.  Hot shards stay small and cache-resident.
+* ``lookup_cold_nN`` — uniform shuffled probes over everything.
+* ``destroy_nN`` — pop in creation order (how retirement actually
+  arrives: EDTs retire roughly in creation order; map/file populations
+  retire in bulk).
+* ``failstop_nN`` — dropping the whole table (the `kill_node` path):
+  O(shards) clear vs per-key deletion of the flat dict.
+* ``spill_rt`` — end-to-end `Runtime(spill_threshold=…)` scenario in
+  deterministic virtual time (makespan + spilled counts) so the spill
+  path has a perf-trajectory row.
+
+`summary()` emits BENCH_guidtable.json for scripts/bench_diff.py.
+"""
+import time
+
+from repro.core import (DbMode, Guid, NULL_GUID, ObjectKind, ObjectTable,
+                        Runtime, spawn_main)
+
+_DB = ObjectKind.DATABLOCK
+
+
+class _Obj:
+    __slots__ = ("guid",)
+
+    def __init__(self, g):
+        self.guid = g
+
+
+class _FlatTable:
+    """The seed's layout: one flat Guid-keyed dict per node."""
+
+    __slots__ = ("_objs",)
+
+    def __init__(self):
+        self._objs = {}
+
+    def insert(self, obj):
+        self._objs[obj.guid] = obj
+
+    def get(self, gid, default=None):
+        return self._objs.get(gid, default)
+
+    def pop(self, gid, default=None):
+        return self._objs.pop(gid, default)
+
+    def clear(self):
+        self._objs.clear()
+
+
+def _guids(n):
+    return [Guid(0, i, _DB) for i in range(1, n + 1)]
+
+
+def _probes(n, hot=None, shuffle=True):
+    """Freshly constructed (message-decoded) probe guids: lookups *and*
+    destroys arrive over the wire (MDep/MSatisfy/MDestroy), so probes are
+    equal-but-not-identical to the stored keys for both table layouts."""
+    import random
+    lo = 1 if hot is None else n - hot + 1
+    out = [Guid(0, i, _DB) for i in range(lo, n + 1)]
+    if shuffle:
+        random.Random(0).shuffle(out)
+    return out
+
+
+def _best(fn, reps=3):
+    return min(fn() for _ in range(reps))
+
+
+def _populate(table_cls, objs):
+    t = table_cls()
+    ins = t.insert
+    for o in objs:
+        ins(o)
+    return t
+
+
+def _time_create(table_cls, objs):
+    def run():
+        t0 = time.perf_counter()
+        _populate(table_cls, objs)
+        return time.perf_counter() - t0
+    return _best(run)
+
+
+def _time_lookup(table, probes, reps=1):
+    get = table.get
+
+    def run():
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            for g in probes:
+                get(g)
+        return time.perf_counter() - t0
+    return _best(run)
+
+
+def _time_destroy(table_cls, objs, probes):
+    def run():
+        t = _populate(table_cls, objs)
+        pop = t.pop
+        t0 = time.perf_counter()
+        for g in probes:
+            pop(g)
+        return time.perf_counter() - t0
+    return _best(run)
+
+
+def _time_failstop(table_cls, objs):
+    def run():
+        t = _populate(table_cls, objs)
+        t0 = time.perf_counter()
+        t.clear()
+        return time.perf_counter() - t0
+    return _best(run)
+
+
+def _spill_scenario(threshold):
+    """Deterministic virtual-time spill round trip (64 blocks, 1 node)."""
+    rt = Runtime(io_latency=1.0, spill_threshold=threshold, shard_bits=4)
+    made = []
+
+    def maker(paramv, depv, api):
+        for i in range(64):
+            g, buf = api.db_create(256)
+            buf[:] = i & 0xFF
+            made.append(g)
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    rt.run()
+    spilled = rt.stats.spilled_objects
+    rt.spill_threshold = None
+
+    def reader(paramv, depv, api):
+        return NULL_GUID
+
+    def phase2(paramv, depv, api):
+        tmpl = api.edt_template_create(reader, 0, 1)
+        for g in made:
+            api.edt_create(tmpl, depv=[g], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, phase2)
+    stats = rt.run()
+    rt.close()
+    return stats, spilled
+
+
+def run():
+    rows = []
+    hot_probe = 4096
+    for n in (10_000, 100_000, 1_000_000):
+        objs = [_Obj(g) for g in _guids(n)]
+        cold = _probes(n)
+        ordered = _probes(n, shuffle=False)
+        hot = _probes(n, hot=min(hot_probe, n))
+        hot_reps = max(1, (4 * n) // len(hot) // 8)
+
+        c_flat = _time_create(_FlatTable, objs)
+        c_shard = _time_create(ObjectTable, objs)
+        flat = _populate(_FlatTable, objs)
+        shard = _populate(ObjectTable, objs)
+        lh_flat = _time_lookup(flat, hot, hot_reps)
+        lh_shard = _time_lookup(shard, hot, hot_reps)
+        lc_flat = _time_lookup(flat, cold)
+        lc_shard = _time_lookup(shard, cold)
+        d_flat = _time_destroy(_FlatTable, objs, ordered)
+        d_shard = _time_destroy(ObjectTable, objs, ordered)
+        f_flat = _time_failstop(_FlatTable, objs)
+        f_shard = _time_failstop(ObjectTable, objs)
+
+        nprobe_hot = len(hot) * hot_reps
+        rows.append((f"guidtable.create_n{n}",
+                     f"{c_shard / n * 1e6:.4f}",
+                     f"flat_us={c_flat / n * 1e6:.4f};"
+                     f"speedup={c_flat / c_shard:.2f}x"))
+        rows.append((f"guidtable.lookup_hot_n{n}",
+                     f"{lh_shard / nprobe_hot * 1e6:.4f}",
+                     f"flat_us={lh_flat / nprobe_hot * 1e6:.4f};"
+                     f"speedup={lh_flat / lh_shard:.2f}x"))
+        rows.append((f"guidtable.lookup_cold_n{n}",
+                     f"{lc_shard / n * 1e6:.4f}",
+                     f"flat_us={lc_flat / n * 1e6:.4f};"
+                     f"speedup={lc_flat / lc_shard:.2f}x"))
+        rows.append((f"guidtable.destroy_n{n}",
+                     f"{d_shard / n * 1e6:.4f}",
+                     f"flat_us={d_flat / n * 1e6:.4f};"
+                     f"speedup={d_flat / d_shard:.2f}x"))
+        rows.append((f"guidtable.failstop_n{n}",
+                     f"{f_shard * 1e6:.1f}",
+                     f"flat_us={f_flat * 1e6:.1f};"
+                     f"speedup={f_flat / f_shard:.2f}x"))
+
+    stats, spilled = _spill_scenario(threshold=8)
+    rows.append(("guidtable.spill_rt",
+                 f"{stats.makespan:.0f}",
+                 f"spilled={spilled};write_ops={stats.io_write_ops};"
+                 f"read_ops={stats.io_read_ops};"
+                 f"shards={stats.table_shards}"))
+    return rows
+
+
+def summary():
+    """Machine-readable snapshot for BENCH_guidtable.json."""
+    n = 1_000_000
+    objs = [_Obj(g) for g in _guids(n)]
+    cold = _probes(n)
+    ordered = _probes(n, shuffle=False)
+    hot = _probes(n, hot=4096)
+
+    t0 = time.perf_counter()
+    flat = _populate(_FlatTable, objs)
+    shard = _populate(ObjectTable, objs)
+    lh_flat = _time_lookup(flat, hot, 100)
+    lh_shard = _time_lookup(shard, hot, 100)
+    lc_flat = _time_lookup(flat, cold)
+    lc_shard = _time_lookup(shard, cold)
+    d_flat = _time_destroy(_FlatTable, objs, ordered)
+    d_shard = _time_destroy(ObjectTable, objs, ordered)
+    stats, spilled = _spill_scenario(threshold=8)
+    wall = time.perf_counter() - t0
+    return {
+        "n_objects": n,
+        "lookup_hot_sharded_s": lh_shard,
+        "lookup_hot_flat_s": lh_flat,
+        "lookup_hot_speedup": lh_flat / lh_shard,
+        "lookup_cold_sharded_s": lc_shard,
+        "lookup_cold_flat_s": lc_flat,
+        "lookup_cold_speedup": lc_flat / lc_shard,
+        "destroy_sharded_s": d_shard,
+        "destroy_flat_s": d_flat,
+        "destroy_speedup": d_flat / d_shard,
+        "makespan_spill": stats.makespan,
+        "spilled_objects": spilled,
+        "spill_io_write_ops": stats.io_write_ops,
+        "wall_time_s": wall,
+    }
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us},{derived}")

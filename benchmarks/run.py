@@ -18,9 +18,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
-_SECTIONS = ("bench_lid", "bench_map", "bench_fileio", "bench_partition",
-             "bench_contention", "bench_flash", "bench_train",
-             "bench_roofline")
+_SECTIONS = ("bench_lid", "bench_map", "bench_guidtable", "bench_fileio",
+             "bench_partition", "bench_contention", "bench_flash",
+             "bench_train", "bench_roofline")
 
 
 def main() -> None:

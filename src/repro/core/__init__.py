@@ -13,6 +13,7 @@ from .guid import (
     EDT_PROP_LID,
     EDT_PROP_MAPPED,
     EDT_PROP_NONE,
+    GUID_SHARD_BITS,
     OCR_DB_PARTITION_STATIC,
     DbMode,
     EventKind,
@@ -24,11 +25,15 @@ from .guid import (
     UNINITIALIZED_GUID,
     id_type,
     is_null,
+    shard_index,
+    shard_of,
+    shard_span,
 )
 from .objects import (
     ChunkOverlapError,
     DepEntry,
     FileModeError,
+    ObjectTable,
     OcrError,
     PartitionDeadlockError,
     PartitionOverlapError,
@@ -40,6 +45,8 @@ __all__ = [
     "Runtime", "TaskCtx", "Stats", "spawn_main",
     "Guid", "Lid", "IdType", "ObjectKind", "EventKind", "DbMode",
     "NULL_GUID", "UNINITIALIZED_GUID", "id_type", "is_null",
+    "GUID_SHARD_BITS", "shard_index", "shard_of", "shard_span",
+    "ObjectTable",
     "EDT_PROP_NONE", "EDT_PROP_LID", "EDT_PROP_MAPPED",
     "DB_PROP_NO_ACQUIRE", "OCR_DB_PARTITION_STATIC",
     "DB_COPY_PLAIN", "DB_COPY_PARTITION", "DB_COPY_PARTITION_BACK",

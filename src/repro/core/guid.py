@@ -108,6 +108,32 @@ class Lid:
         return f"L({self.node}:{self.seq})"
 
 
+# --------------------------------------------------------------- shard routing
+#
+# GUIDs encode creation-time structure — (node, seq, kind) — precisely so the
+# runtime can exploit it (§2).  The per-node object tables
+# (``repro.core.objects.ObjectTable``) shard by kind, then by fixed-width seq
+# range: routing a Guid to its shard is pure arithmetic on fields the
+# identifier already carries (one shift), never a hash of the full triple.
+
+GUID_SHARD_BITS = 8          # 2**8 = 256 seqs per shard
+
+
+def shard_index(seq: int, bits: int = GUID_SHARD_BITS) -> int:
+    """Index of the seq-range shard holding ``seq`` (O(1), one shift)."""
+    return seq >> bits
+
+
+def shard_span(index: int, bits: int = GUID_SHARD_BITS) -> "tuple[int, int]":
+    """Half-open ``[lo, hi)`` seq range covered by shard ``index``."""
+    return (index << bits, (index + 1) << bits)
+
+
+def shard_of(gid: Guid, bits: int = GUID_SHARD_BITS) -> "tuple[ObjectKind, int]":
+    """The ``(kind, seq-range)`` shard key a Guid routes to."""
+    return (gid.kind, gid.seq >> bits)
+
+
 # Sentinels (mirroring NULL_GUID / UNINITIALIZED_GUID in the paper's listings).
 NULL_GUID = Guid(-1, -1, ObjectKind.EVENT)
 UNINITIALIZED_GUID = Guid(-2, -2, ObjectKind.EVENT)

@@ -54,16 +54,19 @@ __all__ = ["IoOp", "IoQueue"]
 class IoOp:
     """One disk operation (post-coalescing) on a node's IO queue."""
 
-    kind: str                         # "read" | "write"
+    kind: str                         # "read" | "write" | "spill"
     node: int
     path: str
     offset: int
     size: int
     db: Optional["Guid"] = None       # read target data block
-    file: Optional["Guid"] = None
+    file: Optional["Guid"] = None     # None for spill-file ops
     data: Optional[bytes] = None      # write payload, snapshot at enqueue
     chunks: int = 1                   # chunk write-backs merged into this op
     performed: bool = False           # sync mode: OS IO already done
+    # "spill" only: the shard's victims as (db guid, spill offset, size,
+    # db.version at snapshot) — a stale version aborts that victim
+    victims: Optional[List[Tuple]] = None
     enqueued_at: float = 0.0
     start: float = 0.0                # disk busy interval [start, done)
     done: float = 0.0
@@ -119,7 +122,7 @@ class IoQueue:
         self.inflight = max(0, self.inflight - 1)
         if op.kind == "read":
             self.reads_inflight = max(0, self.reads_inflight - 1)
-        else:
+        elif op.kind == "write":
             pend = self._pending_writes.get((op.node, op.path))
             if pend is not None:
                 if op in pend:
@@ -129,14 +132,40 @@ class IoQueue:
 
     # --------------------------------------------------------------- reads
 
-    def submit_read(self, db, f, at: Optional[float] = None) -> float:
-        """Enqueue the §5 lazy read of ``db``'s file range (idempotent)."""
+    def submit_read(self, db, f, at: Optional[float] = None,
+                    path: Optional[str] = None,
+                    offset: Optional[int] = None) -> float:
+        """Enqueue the §5 lazy read of ``db``'s file range (idempotent).
+
+        With ``path``/``offset`` overrides (``f`` may then be None) the read
+        targets the node's spill file instead of a §5 user file — the
+        re-materialization of a spilled block rides the same queue, defers
+        grants the same way, and wakes waiters through the same ``MIoDone``.
+        """
         if db.io_pending:
             return 0.0
         db.io_pending = True
-        op = IoOp(kind="read", node=db.node, path=f.path,
-                  offset=db.file_offset, size=db.size,
-                  db=db.guid, file=f.guid)
+        op = IoOp(kind="read", node=db.node,
+                  path=f.path if path is None else path,
+                  offset=db.file_offset if offset is None else offset,
+                  size=db.size, db=db.guid,
+                  file=None if f is None else f.guid)
+        return self._submit(op, self.rt.clock if at is None else at)
+
+    # -------------------------------------------------------------- spill
+
+    def submit_spill(self, node: int, path: str, offset: int, data: bytes,
+                     victims: List[Tuple], at: Optional[float] = None) -> float:
+        """Enqueue one shard's cold-object write-back (one disk op for the
+        whole shard's victims; payloads are concatenated at ``offset``).
+
+        Accounted as a write op (``Stats.io_write_ops``) but kept out of
+        the §5 elevator/coalescing registries: spill ops target the node's
+        private spill file and never merge with user-file write-backs.
+        """
+        op = IoOp(kind="spill", node=node, path=path, offset=offset,
+                  size=len(data), data=data, victims=victims,
+                  chunks=len(victims))
         return self._submit(op, self.rt.clock if at is None else at)
 
     # -------------------------------------------------------------- writes
@@ -228,16 +257,21 @@ class IoQueue:
 
     # ---------------------------------------------------------- sync mode
 
-    def charge_sync(self, db, f, kind: str) -> float:
+    def charge_sync(self, db, f, kind: str, path: Optional[str] = None,
+                    offset: Optional[int] = None) -> float:
         """``io_mode="sync"``: same disk model, no overlap, no coalescing.
 
         The caller performs the OS IO immediately; this occupies the disk
         and returns the virtual time the caller must block
         (``done - now``).  The pre-``performed`` completion still flows
         through the queue so the makespan covers the disk busy interval.
+        ``path``/``offset`` overrides (``f`` then None) charge a spill-file
+        read the same way the async path does.
         """
-        op = IoOp(kind=kind, node=db.node, path=f.path,
-                  offset=db.file_offset, size=db.size,
-                  db=db.guid, file=f.guid, performed=True)
+        op = IoOp(kind=kind, node=db.node,
+                  path=f.path if path is None else path,
+                  offset=db.file_offset if offset is None else offset,
+                  size=db.size, db=db.guid,
+                  file=None if f is None else f.guid, performed=True)
         done = self._submit(op, self.rt.clock)
         return done - self.rt.clock

@@ -10,13 +10,15 @@ two tasks in RW on the whole parent serialize.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
-from .guid import DbMode, EventKind, Guid, Lid, NULL_GUID
+from .guid import (DbMode, EventKind, GUID_SHARD_BITS, Guid, Lid, NULL_GUID,
+                   ObjectKind)
 
 UNSET = object()  # pre-slot not yet satisfied
+_MISSING = object()
 
 
 class OcrError(RuntimeError):
@@ -41,6 +43,183 @@ class ChunkOverlapError(OcrError):
 
 class FileModeError(OcrError):
     pass
+
+
+class _Shard:
+    """One ``(kind, seq-range)`` shard of a node's GUID table.
+
+    ``objs`` keys by the bare ``seq`` int: within a per-node, per-kind table
+    a Guid's seq is unique, so probes never hash or compare full Guid
+    triples — int keys keep every dict operation at C level.  ``destroyed``
+    counts objects removed from this shard over its lifetime; ``spilled``
+    counts members whose buffers currently live in the node's spill file.
+    """
+
+    __slots__ = ("objs", "destroyed", "spilled")
+
+    def __init__(self) -> None:
+        self.objs: Dict[int, Any] = {}
+        self.destroyed = 0
+        self.spilled = 0
+
+    def hot(self) -> bool:
+        """A shard is hot while it holds any buffer-resident live object."""
+        return len(self.objs) > self.spilled
+
+
+class ObjectTable:
+    """Per-node GUID table, sharded by ``(ObjectKind, seq-range)``.
+
+    The paper's GUIDs encode creation-time structure (§2) precisely so the
+    runtime can exploit it; this table is that exploitation on the storage
+    side.  Routing is O(1) arithmetic on fields the :class:`Guid` already
+    carries — ``kind`` picks the kind map, ``seq >> shard_bits`` picks the
+    shard — so lookups avoid both the Guid tuple hash and the Python-level
+    ``Guid.__eq__`` a flat ``Dict[Guid, Any]`` pays on every probe of a
+    message-decoded (non-identical) identifier.  Hot working sets stay in
+    a handful of small int-keyed dicts instead of scattering across one
+    multi-million-entry map, empty shards are reclaimed wholesale, and a
+    fail-stop drops the whole table in O(shards), not O(objects).
+
+    Per-shard live (``len(shard.objs)``) / ``destroyed`` / ``spilled``
+    counts drive the ``Stats.table_shards`` / ``table_hot_shards`` /
+    ``spilled_objects`` gauges and the cold-object spill policy
+    (``Runtime(spill_threshold=…)``).
+    """
+
+    __slots__ = ("_kinds", "_bits", "_destroyed_dropped")
+
+    def __init__(self, shard_bits: int = GUID_SHARD_BITS) -> None:
+        self._bits = shard_bits
+        self._kinds: Dict[ObjectKind, Dict[int, _Shard]] = \
+            {k: {} for k in ObjectKind}
+        # destroyed counts of shards already reclaimed, aggregated per kind
+        self._destroyed_dropped: Dict[ObjectKind, int] = \
+            {k: 0 for k in ObjectKind}
+
+    @property
+    def shard_bits(self) -> int:
+        return self._bits
+
+    # ------------------------------------------------------------ hot path
+
+    def insert(self, obj: Any) -> None:
+        """Insert ``obj`` under ``obj.guid`` (every runtime object has one)."""
+        gid = obj.guid
+        seq = gid.seq
+        shards = self._kinds[gid.kind]
+        idx = seq >> self._bits
+        sh = shards.get(idx)
+        if sh is None:
+            sh = shards[idx] = _Shard()
+        sh.objs[seq] = obj
+
+    def get(self, gid: Guid, default: Any = None) -> Any:
+        seq = gid.seq
+        try:
+            return self._kinds[gid.kind][seq >> self._bits].objs.get(seq, default)
+        except (KeyError, AttributeError):
+            # unknown shard, or a non-Guid probe (e.g. an unresolved Lid)
+            # — same "not found" answer the flat dict gave
+            return default
+
+    def pop(self, gid: Guid, default: Any = None) -> Any:
+        try:
+            seq = gid.seq
+            shards = self._kinds[gid.kind]
+            idx = seq >> self._bits
+            sh = shards[idx]
+            obj = sh.objs.pop(seq)
+        except (KeyError, AttributeError):
+            return default
+        sh.destroyed += 1
+        if not sh.objs:
+            # reclaim the empty shard; its destroyed count survives in the
+            # per-kind aggregate
+            self._destroyed_dropped[gid.kind] += sh.destroyed
+            del shards[idx]
+        return obj
+
+    # ----------------------------------------------------- dict-compat API
+
+    def __getitem__(self, gid: Guid) -> Any:
+        obj = self.get(gid, _MISSING)
+        if obj is _MISSING:
+            raise KeyError(gid)
+        return obj
+
+    def __setitem__(self, gid: Guid, obj: Any) -> None:
+        self.insert(obj)
+
+    def __contains__(self, gid: Guid) -> bool:
+        return self.get(gid, _MISSING) is not _MISSING
+
+    def __len__(self) -> int:
+        return sum(len(sh.objs) for shards in self._kinds.values()
+                   for sh in shards.values())
+
+    def values(self) -> Iterator[Any]:
+        for shards in self._kinds.values():
+            for idx in sorted(shards):
+                yield from shards[idx].objs.values()
+
+    def items(self) -> Iterator[Tuple[Guid, Any]]:
+        for obj in self.values():
+            yield obj.guid, obj
+
+    def __iter__(self) -> Iterator[Guid]:
+        for obj in self.values():
+            yield obj.guid
+
+    def clear(self) -> None:
+        """Drop every shard wholesale (fail-stop: O(shards), not O(objects))."""
+        for kind, shards in self._kinds.items():
+            for sh in shards.values():
+                self._destroyed_dropped[kind] += sh.destroyed + len(sh.objs)
+            shards.clear()
+
+    # ------------------------------------------------- shard introspection
+
+    def shards(self, kind: ObjectKind) -> List[Tuple[int, _Shard]]:
+        """Live shards of ``kind`` in ascending seq-range order (oldest
+        first — the cold end the spill policy scans from)."""
+        shards = self._kinds[kind]
+        return [(idx, shards[idx]) for idx in sorted(shards)]
+
+    def shard_count(self) -> int:
+        return sum(len(shards) for shards in self._kinds.values())
+
+    def hot_shard_count(self) -> int:
+        """Data-block shards still holding ≥1 buffer-resident block.
+
+        Only DATABLOCK shards are counted: other kinds hold no buffers,
+        so "hot" (= spill has not drained it) is meaningless for them —
+        counting them would make ``Stats.table_hot_shards`` track shard
+        population instead of memory residency.
+        """
+        return sum(1 for sh in self._kinds[ObjectKind.DATABLOCK].values()
+                   if sh.hot())
+
+    def live_count(self, kind: ObjectKind) -> int:
+        """Live objects of ``kind`` (O(shards of that kind), not O(1) —
+        callers poll it per spill check, not per table op)."""
+        return sum(len(sh.objs) for sh in self._kinds[kind].values())
+
+    def destroyed_count(self, kind: ObjectKind) -> int:
+        """Objects of ``kind`` destroyed over the table's lifetime
+        (including those whose shard was since reclaimed)."""
+        return self._destroyed_dropped[kind] + \
+            sum(sh.destroyed for sh in self._kinds[kind].values())
+
+    def note_spilled(self, gid: Guid) -> None:
+        sh = self._kinds[gid.kind].get(gid.seq >> self._bits)
+        if sh is not None:
+            sh.spilled += 1
+
+    def note_unspilled(self, gid: Guid) -> None:
+        sh = self._kinds[gid.kind].get(gid.seq >> self._bits)
+        if sh is not None and sh.spilled > 0:
+            sh.spilled -= 1
 
 
 def spans_overlap(spans) -> bool:
@@ -123,6 +302,14 @@ class DbObj:
     dirty: bool = False
     lazy_file_read: bool = False                   # contents read at first acquire
     io_pending: bool = False                       # async §5 read in flight
+    # --- cold-object spill state ---
+    spilling: bool = False                         # spill write-back in flight
+    spilled: bool = False                          # buffer lives in the spill file
+    spill_offset: int = -1                         # offset in the node's spill file
+    # bumped whenever the buffer can change (RW/EW grant, copy into this
+    # block): a spill completion whose snapshot predates the current
+    # version aborts instead of dropping fresher bytes
+    version: int = 0
     # --- lock state ---
     readers: int = 0
     writer: Optional[Guid] = None                  # holding EDT guid

@@ -39,6 +39,7 @@ import itertools
 import os
 import random
 import struct
+import tempfile
 from typing import Any, Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -50,6 +51,7 @@ from .guid import (
     DB_PROP_NO_ACQUIRE,
     EDT_PROP_LID,
     EDT_PROP_MAPPED,
+    GUID_SHARD_BITS,
     OCR_DB_PARTITION_STATIC,
     DbMode,
     EventKind,
@@ -84,6 +86,7 @@ from .objects import (
     FileModeError,
     FileObj,
     MapObj,
+    ObjectTable,
     OcrError,
     PartitionDeadlockError,
     PartitionOverlapError,
@@ -128,6 +131,12 @@ class Stats:
     io_reads_inflight_max: int = 0
     io_coalesced_writes: int = 0
     io_overlap_ticks: float = 0.0
+    # GUID-table gauges (refreshed when run() returns): live shards across
+    # all nodes, shards still holding a buffer-resident object, and data
+    # blocks whose buffers currently live in a node spill file
+    table_shards: int = 0
+    table_hot_shards: int = 0
+    spilled_objects: int = 0
     makespan: float = 0.0
 
     def snapshot(self) -> Dict[str, float]:
@@ -140,8 +149,18 @@ class _Node:
     alive: bool = True
     guid_seq: int = 0
     lid_seq: int = 0
-    objects: Dict[Guid, Any] = dataclasses.field(default_factory=dict)
+    # GUID table sharded by (kind, seq-range) — see objects.ObjectTable
+    objects: ObjectTable = dataclasses.field(default_factory=ObjectTable)
     lid_table: Dict[Lid, Optional[Guid]] = dataclasses.field(default_factory=dict)
+    # --- cold-object spill (one private spill file per node) ---
+    spill_path: Optional[str] = None
+    spill_tail: int = 0               # bump allocator over the spill file
+    spilled: int = 0                  # blocks currently spilled on this node
+    spill_inflight: int = 0           # victims with a spill write in flight
+    spill_scan_at: float = -1.0       # last fruitless-scan timestamp guard
+    # blocks owning their buffer (not views, not spilled/unread): kept
+    # incrementally so the spill threshold check is O(1), not O(objects)
+    resident_dbs: int = 0
     # messages held locally until all their unresolved LIDs are patched;
     # a message is indexed under *every* unresolved LID it references, so
     # one MMap patch releases it iff it was the last unresolved one — no
@@ -167,6 +186,8 @@ class Runtime:
         reader_batch_bound: int = 8,
         io_mode: str = "async",
         read_ahead: bool = True,
+        spill_threshold: Optional[int] = None,
+        shard_bits: int = GUID_SHARD_BITS,
     ):
         self.num_nodes = num_nodes
         self.net_latency = float(net_latency)
@@ -187,7 +208,13 @@ class Runtime:
         # max RO waiters granted past a blocked FIFO head per wake (bounded
         # barging: 0 disables; keeps writers from starving behind readers)
         self.reader_batch_bound = reader_batch_bound
-        self.nodes = [_Node(i) for i in range(num_nodes)]
+        # cold-object spill: when a node holds more than this many
+        # buffer-resident data blocks, idle unlocked ones spill to the
+        # node's spill file through the §5 IO queue (None disables)
+        self.spill_threshold = spill_threshold
+        self.shard_bits = shard_bits
+        self.nodes = [_Node(i, objects=ObjectTable(shard_bits))
+                      for i in range(num_nodes)]
         self.stats = Stats()
         self.clock = 0.0
         self._heap: List[Tuple[float, int, str, Any]] = []
@@ -244,13 +271,24 @@ class Runtime:
 
     def _pick_node(self, hint: Optional[int]) -> int:
         if hint is not None:
-            return hint % self.num_nodes
-        self._placement_rr = (self._placement_rr + 1) % self.num_nodes
-        return self._placement_rr
+            n = hint % self.num_nodes
+            if not self.nodes[n].alive:
+                raise OcrError(
+                    f"placement on node {n}: node fail-stopped")
+            return n
+        for _ in range(self.num_nodes):
+            self._placement_rr = (self._placement_rr + 1) % self.num_nodes
+            if self.nodes[self._placement_rr].alive:
+                return self._placement_rr
+        raise OcrError("no alive nodes to place on")
 
     def lookup(self, gid: Guid) -> Any:
-        obj = self.nodes[gid.node].objects.get(gid)
+        node = self.nodes[gid.node]
+        obj = node.objects.get(gid)
         if obj is None:
+            if not node.alive:
+                raise OcrError(
+                    f"object {gid} lost: node {gid.node} fail-stopped")
             raise OcrError(f"unknown or destroyed object {gid}")
         return obj
 
@@ -339,17 +377,82 @@ class Runtime:
                 self._flush_copy_batch()
             elif kind == "io_flush":
                 self.io.flush_writes()
+            elif kind == "failstop_wake":
+                # a survivor EDT stranded on a fail-stopped node's DB:
+                # retrying the grant reaches _execute's lookup of the lost
+                # block, which raises the clean fail-stop OcrError
+                if payload.state == "ready" and payload.waiting_on is None \
+                        and self.nodes[payload.node].alive:
+                    self._try_grant(payload)
             elif kind == "db_copy":
                 self._do_db_copy(payload)
         self.stats.makespan = self.clock
+        self._refresh_table_stats()
         return self.stats
+
+    def _refresh_table_stats(self) -> None:
+        shards = hot = 0
+        for n in self.nodes:
+            shards += n.objects.shard_count()
+            hot += n.objects.hot_shard_count()
+        self.stats.table_shards = shards
+        self.stats.table_hot_shards = hot
+
+    def close(self) -> None:
+        """Release host resources (per-node spill files)."""
+        for node in self.nodes:
+            if node.spill_path is not None:
+                try:
+                    os.unlink(node.spill_path)
+                except OSError:
+                    pass
+                node.spill_path = None
+
+    def __del__(self) -> None:  # best-effort; close() is the real API
+        try:
+            self.close()
+        except Exception:
+            pass
 
     def quiescent(self) -> bool:
         return not self._heap
 
     def kill_node(self, idx: int) -> None:
-        """Fail-stop a node: lose its objects and all in-flight traffic to it."""
-        self.nodes[idx].alive = False
+        """Fail-stop a node: lose its objects and all in-flight traffic to it.
+
+        Fail-stop actually *loses* the node's objects: the GUID table is
+        dropped wholesale (O(shards) — the sharded layout's bulk path),
+        the LID table and deferred messages go with it, survivors looking
+        the objects up get a clean :class:`OcrError` naming the dead node,
+        and the node's spill file is reclaimed from disk.
+        """
+        node = self.nodes[idx]
+        node.alive = False
+        node.objects.clear()
+        node.lid_table.clear()
+        node.deferred.clear()
+        node.unresolved_lids = 0
+        # spilled buffers die with the node: fix the gauge and reclaim disk
+        self.stats.spilled_objects -= node.spilled
+        node.spilled = 0
+        node.spill_inflight = 0
+        node.resident_dbs = 0
+        if node.spill_path is not None:
+            try:
+                os.unlink(node.spill_path)
+            except OSError:
+                pass
+            node.spill_path = None
+        # waiter queues keyed by the dead node's DBs can never be granted:
+        # surviving EDTs parked there are woken so their next grant attempt
+        # surfaces the clean fail-stop OcrError instead of hanging silently
+        for g in [g for g in self._db_waiters if g.node == idx]:
+            for edt in self._db_waiters.pop(g):
+                if edt.waiting_on != g or not self.nodes[edt.node].alive:
+                    continue
+                edt.waiting_on = None
+                heapq.heappush(self._heap, (self.clock, next(self._tick),
+                                            "failstop_wake", edt))
 
     # ---------------------------------------------------------- msg dispatch
 
@@ -375,7 +478,35 @@ class Runtime:
     def _create_object(self, node: int, kind: str, payload: Dict[str, Any]) -> Guid:
         if kind == "edt":
             return self._create_edt(node, payload)
-        raise OcrError(f"unsupported remote-create kind {kind}")
+        if kind == "db":
+            return self._create_db(node, payload).guid
+        if kind == "event":
+            return self._create_event(node, payload).guid
+        raise OcrError(
+            f"unsupported remote-create kind {kind!r}: only EDTs, data "
+            f"blocks and events can be created on a remote node — create "
+            f"the {kind} locally (or on its owner via placement at the "
+            f"API call) and publish its guid, e.g. through a labeled map")
+
+    def _create_db(self, node: int, p: Dict[str, Any]) -> DbObj:
+        guid = self._alloc_guid(node, ObjectKind.DATABLOCK)
+        size = p["size"]
+        no_acq = bool(p.get("props", 0) & DB_PROP_NO_ACQUIRE)
+        db = DbObj(guid=guid, size=size, node=node, no_acquire=no_acq)
+        db.ready = True
+        db.pending_deps = []
+        if not no_acq:
+            db.buffer = np.zeros(size, dtype=np.uint8)
+            self.nodes[node].resident_dbs += 1
+        self.nodes[node].objects.insert(db)
+        return db
+
+    def _create_event(self, node: int, p: Dict[str, Any]) -> EventObj:
+        guid = self._alloc_guid(node, ObjectKind.EVENT)
+        ev = EventObj(guid, p.get("kind", EventKind.ONCE),
+                      latch_count=p.get("latch_count", 0))
+        self.nodes[node].objects.insert(ev)
+        return ev
 
     def _create_edt(self, node: int, p: Dict[str, Any]) -> Guid:
         guid = self._alloc_guid(node, ObjectKind.EDT)
@@ -395,7 +526,7 @@ class Runtime:
         )
         if p.get("output_event") is not None:
             edt.output_event = p["output_event"]
-        self.nodes[node].objects[guid] = edt
+        self.nodes[node].objects.insert(edt)
         # wire creation-time dependences
         modes = p.get("dep_modes") or [DbMode.RO] * len(depv)
         for slot, (dep, mode) in enumerate(zip(depv, modes)):
@@ -405,6 +536,10 @@ class Runtime:
             if is_null(dep):
                 self._satisfy_slot(edt, slot, NULL_GUID)
             else:
+                if isinstance(dep, Guid) and not self.nodes[dep.node].alive:
+                    raise OcrError(
+                        f"dependence on {dep}: node {dep.node} fail-stopped "
+                        f"and its objects are lost")
                 self.send(MDep(source=dep, dest=guid, slot=slot, mode=mode),
                           node, dep.node if isinstance(dep, Guid) else node)
         if edt.pending == 0 and edt.state == "created":
@@ -566,11 +701,12 @@ class Runtime:
             if db.partitions or not db.available(mode):
                 self._enqueue_waiter(edt, db.guid)
                 return db.guid
-            # §5 async IO: a block whose lazy read has not landed defers
-            # the grant through the same waiter queue; the grant attempt
-            # itself issues the read if read-ahead did not already
+            # §5 async IO: a block whose lazy read has not landed — or
+            # whose buffer was spilled cold — defers the grant through the
+            # same waiter queue; the grant attempt itself issues the read
+            # (file range or spill range) if read-ahead did not already
             if self.io_mode == "async" and db.buffer is None \
-                    and (db.io_pending or db.lazy_file_read):
+                    and (db.io_pending or db.lazy_file_read or db.spilled):
                 self._start_read(db)
                 self._enqueue_waiter(edt, db.guid)
                 return db.guid
@@ -580,6 +716,7 @@ class Runtime:
             elif mode in (DbMode.RW, DbMode.EW):
                 db.writer = edt.guid
                 db.dirty = True
+                db.version += 1     # an in-flight spill snapshot is now stale
         self._execute(edt)
         return None
 
@@ -612,6 +749,8 @@ class Runtime:
             edt.waiting_on = None
             if edt.state != "ready":
                 continue
+            if not self.nodes[edt.node].alive:
+                continue               # a fail-stopped node's EDT never runs
             self.stats.waiter_wakeups += 1
             if self._try_grant(edt) == db_guid:
                 # re-blocked: _enqueue_waiter appended it; restore its FIFO
@@ -667,6 +806,7 @@ class Runtime:
             if granted >= bound:
                 break
             if cand.waiting_on != db_guid or cand.state != "ready" \
+                    or not self.nodes[cand.node].alive \
                     or not self._waits_ro_only(cand, db_guid):
                 continue
             live = self._db_waiters.get(db_guid)
@@ -691,8 +831,21 @@ class Runtime:
                 break
 
     def _start_read(self, db: DbObj) -> None:
-        """Enqueue the §5 lazy read of ``db`` on its node's IO queue."""
-        if db.io_pending or db.buffer is not None or db.file_guid is None:
+        """Enqueue the §5 lazy read of ``db`` on its node's IO queue.
+
+        A spilled block re-materializes through the same machinery: the
+        read targets the node's spill file instead of a §5 user file, and
+        waiters wake from the same ``MIoDone`` an IO-pending chunk uses.
+        """
+        if db.io_pending or db.buffer is not None:
+            return
+        if db.spilled:
+            node = self.nodes[db.guid.node]
+            self.io.submit_read(db, None, path=node.spill_path,
+                                offset=db.spill_offset)
+            self._log("IO unspill", db.guid, f"[{db.spill_offset},+{db.size})")
+            return
+        if db.file_guid is None:
             return
         f: FileObj = self.lookup(db.file_guid)
         self.io.submit_read(db, f)
@@ -701,21 +854,37 @@ class Runtime:
     def _materialize(self, db: DbObj) -> np.ndarray:
         """Synchronous materialization (zero virtual-time charge).
 
-        EDT acquisitions never reach this with an unread file chunk — the
-        grant defers until the async read lands (or, in sync mode,
-        ``_execute`` charges the read to the task's blocking time).  The
-        remaining callers (§6.3 copies, ``db_partition``, descriptor
-        fill) keep the seed's immediate-read semantics.
+        EDT acquisitions never reach this with an unread file chunk or a
+        spilled buffer — the grant defers until the async read lands (or,
+        in sync mode, ``_execute`` charges the read to the task's blocking
+        time).  The remaining callers (§6.3 copies, ``db_partition``,
+        descriptor fill) keep the seed's immediate-read semantics.
         """
         if db.buffer is None:
-            if db.lazy_file_read and db.file_guid is not None:
+            if db.spilled:
+                node = self.nodes[db.guid.node]
+                db.buffer = _read_file_region(node.spill_path,
+                                              db.spill_offset, db.size)
+                self._clear_spill(db)
+            elif db.lazy_file_read and db.file_guid is not None:
                 f: FileObj = self.lookup(db.file_guid)
                 db.buffer = _read_file_region(f.path, db.file_offset, db.size)
                 self.stats.file_bytes_read += db.size
                 db.lazy_file_read = False
             else:
                 db.buffer = np.zeros(db.size, dtype=np.uint8)
+            # views never reach here (they alias a live parent buffer),
+            # so the block now owns its buffer
+            self.nodes[db.guid.node].resident_dbs += 1
         return db.buffer
+
+    def _clear_spill(self, db: DbObj) -> None:
+        """Drop ``db``'s spilled status (re-materialized or destroyed)."""
+        db.spilled = False
+        node = self.nodes[db.guid.node]
+        node.spilled = max(0, node.spilled - 1)
+        node.objects.note_unspilled(db.guid)
+        self.stats.spilled_objects -= 1
 
     def _execute(self, edt: EdtObj) -> None:
         edt.state = "running"
@@ -726,16 +895,24 @@ class Runtime:
         for s, mode in zip(edt.slots, edt.modes):
             if isinstance(s, Guid) and s.kind == ObjectKind.DATABLOCK:
                 db = self.lookup(s)
-                if self.io_mode == "sync" and db.buffer is None \
-                        and db.lazy_file_read and db.file_guid is not None:
+                if self.io_mode == "sync" and db.buffer is None:
                     # sync baseline: the reads happen inside the task's
                     # window, charged per chunk to its blocking time.
                     # charge_sync returns (op done - now): ops on one
                     # node's disk queue already serialize against each
                     # other, so the task blocks until the *latest* one —
-                    # max, not sum (summing double-counts the queueing)
-                    f: FileObj = self.lookup(db.file_guid)
-                    io_wait = max(io_wait, self.io.charge_sync(db, f, "read"))
+                    # max, not sum (summing double-counts the queueing).
+                    # Spilled blocks charge their spill-file read the
+                    # same way, keeping the sync-vs-async comparison fair
+                    if db.spilled:
+                        sn = self.nodes[db.guid.node]
+                        io_wait = max(io_wait, self.io.charge_sync(
+                            db, None, "read", path=sn.spill_path,
+                            offset=db.spill_offset))
+                    elif db.lazy_file_read and db.file_guid is not None:
+                        f: FileObj = self.lookup(db.file_guid)
+                        io_wait = max(io_wait,
+                                      self.io.charge_sync(db, f, "read"))
                 buf = self._materialize(db)
                 if mode in (DbMode.RO, DbMode.CONST):
                     view = buf.view()
@@ -765,8 +942,14 @@ class Runtime:
 
     def _task_end(self, payload: Tuple[Guid, Any]) -> None:
         guid, ret = payload
-        edt: EdtObj = self.lookup(guid)
         self._running_tasks = max(0, self._running_tasks - 1)
+        edt: Optional[EdtObj] = self.try_lookup(guid)
+        if edt is None:
+            # the EDT's node fail-stopped mid-execution (e.g. the body
+            # itself called kill_node): nothing retires, nothing satisfies
+            # — locks it held on surviving nodes' blocks stay held, the
+            # standard fail-stop hazard a recovery layer must handle
+            return
         released: List[DbObj] = []
         for db, mode in self._dep_dbs(edt):
             if mode in (DbMode.RO, DbMode.CONST):
@@ -778,6 +961,14 @@ class Runtime:
             else:
                 released.append(db)
         edt.state = "done"
+        # releases can turn blocks spillable: invalidate the fruitless-scan
+        # guard of every node whose lock state just changed, and run the
+        # spill check there too — a pure data-holder node whose blocks are
+        # only ever locked by remote tasks has no retirements of its own
+        spill_nodes = {edt.node}
+        for db in released:
+            self.nodes[db.guid.node].spill_scan_at = -1.0
+            spill_nodes.add(db.guid.node)
         if edt.output_event is not None:
             ret_r = self.resolve(ret) if ret is not None else NULL_GUID
             if isinstance(ret_r, Guid) and ret_r.kind == ObjectKind.EVENT and not is_null(ret_r):
@@ -791,6 +982,118 @@ class Runtime:
         # wake only waiters of the DBs whose lock state actually changed
         for db in released:
             self._wake_waiters(db.guid)
+        # task retirement is the spill checkpoint: blocks it released are
+        # idle now, and no task body is mid-execution anywhere (the DES
+        # runs bodies atomically), so buffers snapshot consistently
+        for n in sorted(spill_nodes):
+            self._maybe_spill(n)
+
+    # -- cold-object spill ---------------------------------------------------
+
+    def _maybe_spill(self, node_idx: int) -> None:
+        """Spill cold data blocks if ``node_idx`` is over ``spill_threshold``.
+
+        Policy: when a node holds more buffer-resident data blocks than the
+        threshold, idle unlocked ones (no lock holders, no waiters, no live
+        partitions, not a §6 view, no IO in flight) are written back to the
+        node's private spill file — one IO-queue op per shard, scanning
+        shards from the cold (oldest seq-range) end — until the resident
+        count is back under the threshold or no candidates remain.  The
+        buffer is dropped only when the spill op *completes*, so a halted
+        ``run(until)`` or a fail-stop loses exactly the in-flight spill
+        ops, never object payloads (PR 3's IO crash contract).
+        """
+        thr = self.spill_threshold
+        if thr is None:
+            return
+        node = self.nodes[node_idx]
+        if not node.alive:
+            return
+        # resident_dbs counts blocks owning their buffer (views alias a
+        # parent's memory; spilled/unread/write_only/no_acquire hold none)
+        # and is maintained incrementally, so this threshold check is O(1)
+        # per task retirement; blocks with a spill op already in flight are
+        # being drained and don't count against the threshold again
+        need = node.resident_dbs - node.spill_inflight - thr
+        if need <= 0:
+            return
+        if node.spill_scan_at == self.clock:
+            # the last scan at this timestamp found nothing spillable and
+            # nothing was released since (releases clear the guard) —
+            # skip the O(objects) victim walk
+            return
+        spilled_any = False
+        for _idx, shard in node.objects.shards(ObjectKind.DATABLOCK):
+            victims = [o for o in shard.objs.values() if self._spillable(o)]
+            if not victims:
+                continue
+            victims = victims[:need]       # never spill below the threshold
+            self._spill_shard(node, victims)
+            spilled_any = True
+            need -= len(victims)
+            if need <= 0:
+                return
+        if not spilled_any:
+            node.spill_scan_at = self.clock
+
+    def _spillable(self, db: Any) -> bool:
+        return (isinstance(db, DbObj) and db.buffer is not None
+                and not db.spilled and not db.spilling and not db.io_pending
+                and not db.locked() and not db.partitions and not db.is_view
+                and not db.pending_destroy and not db.destroyed
+                and getattr(db, "ready", True)
+                and not self._db_waiters.get(db.guid))
+
+    def _spill_shard(self, node: _Node, victims: List[DbObj]) -> None:
+        """Serialize one shard's cold blocks into the node's spill file
+        through the §5 IO queue (one write-back op for the whole shard)."""
+        if node.spill_path is None:
+            fd, path = tempfile.mkstemp(prefix=f"ocr-spill-n{node.idx}-",
+                                        suffix=".bin")
+            os.close(fd)
+            node.spill_path = path
+        chunks: List[bytes] = []
+        meta: List[Tuple[Guid, int, int, int]] = []
+        off = node.spill_tail
+        for db in victims:
+            data = db.buffer.tobytes()
+            chunks.append(data)
+            meta.append((db.guid, off, len(data), db.version))
+            off += len(data)
+            db.spilling = True
+        node.spill_tail = off
+        node.spill_inflight += len(victims)
+        self.io.submit_spill(node.idx, node.spill_path, meta[0][1],
+                             b"".join(chunks), meta)
+        self._log("SPILL", len(victims), "blocks ->", node.spill_path)
+
+    def _finish_spill(self, op: Any) -> None:
+        """A shard's spill op completed: the OS write happens now, and each
+        victim that stayed cold drops its buffer.  Victims that got hot
+        again (acquired, destroyed, re-versioned by a write or copy) abort
+        — their bytes in the spill file are simply never referenced."""
+        if not op.performed and op.data is not None:
+            _write_file_region(op.path, op.offset,
+                               np.frombuffer(op.data, dtype=np.uint8))
+        for gid, off, _size, version in op.victims:
+            node = self.nodes[gid.node]
+            node.spill_inflight = max(0, node.spill_inflight - 1)
+            db = self.try_lookup(gid)
+            if db is None or not isinstance(db, DbObj) or not db.spilling:
+                continue
+            db.spilling = False
+            if (db.version != version or db.locked() or db.partitions
+                    or db.buffer is None or db.pending_destroy
+                    or self._db_waiters.get(gid)):
+                continue           # hot again: keep the live buffer
+            db.buffer = None
+            db.spilled = True
+            db.spill_offset = off
+            node.spilled += 1
+            node.resident_dbs -= 1
+            node.objects.note_spilled(gid)
+            self.stats.spilled_objects += 1
+        self._log("SPILLED", len(op.victims), "victims (op done)")
 
     # -- destruction ---------------------------------------------------------
 
@@ -815,6 +1118,13 @@ class Runtime:
     def _destroy_db(self, db: DbObj) -> None:
         if db.partitions:
             raise OcrError(f"destroying {db.guid} while partitions are live")
+        if db.spilled:
+            if db.file_guid is not None and db.dirty:
+                # a dirty §5 chunk must write back its real contents below:
+                # re-materialize from the spill file first
+                self._materialize(db)
+            else:
+                self._clear_spill(db)   # accounting only; bytes are dead
         # copies issued before a same-timestamp destroy must land first
         # (batching must not reorder them past the destruction)
         if self._copy_batch and any(
@@ -852,6 +1162,8 @@ class Runtime:
             if f.released and not f.chunks:
                 f.closed = True
         db.destroyed = True
+        if db.buffer is not None and not db.is_view:
+            self.nodes[db.guid.node].resident_dbs -= 1
         self.nodes[db.guid.node].objects.pop(db.guid, None)
         self._ancestor_cache.pop(db.guid, None)
         # waiters parked on a destroyed DB retry with the dep dropped
@@ -860,7 +1172,15 @@ class Runtime:
     # -- labeled maps (§4) ----------------------------------------------------
 
     def _on_MMapGet(self, msg: MMapGet) -> None:
-        m: MapObj = self.lookup(self.resolve(msg.map_id))
+        map_id = self.resolve(msg.map_id)
+        m = self.try_lookup(map_id) if isinstance(map_id, Guid) else None
+        # a map_get racing a map_destroy must fail clean, not touch the
+        # destroyed map's entries/creator (AttributeError / stale creator)
+        if m is None or not isinstance(m, MapObj) or m.destroyed:
+            raise OcrError(
+                f"map_get on destroyed or unknown map {map_id} "
+                f"(index {msg.index}): the map was destroyed before the "
+                f"get arrived")
         if not (0 <= msg.index < m.size):
             raise OcrError(f"map index {msg.index} out of range [0,{m.size})")
         if msg.index not in m.entries:
@@ -936,7 +1256,9 @@ class Runtime:
         if ordered:
             for src_id, dst_id, m in resolved:
                 sbuf = self._materialize(self.lookup(src_id))
-                dbuf = self._materialize(self.lookup(dst_id))
+                dst = self.lookup(dst_id)
+                dbuf = self._materialize(dst)
+                dst.version += 1
                 dbuf[m.dst_offset: m.dst_offset + m.size] = \
                     sbuf[m.src_offset: m.src_offset + m.size]
                 self._copy_done(m)
@@ -949,6 +1271,7 @@ class Runtime:
             dst: DbObj = self.lookup(dst_id)
             sbuf = self._materialize(src)
             dbuf = self._materialize(dst)
+            dst.version += 1
             ranges = [(m.dst_offset, m.src_offset, m.size) for m in msgs]
             if not self._fused_copy(dbuf, sbuf, ranges):
                 for (d_off, s_off, size) in ranges:
@@ -1005,6 +1328,9 @@ class Runtime:
                 dst.parent = src.guid
                 dst.offset_in_parent = msg.src_offset
                 src.partitions[dst.guid] = (msg.src_offset, msg.size)
+                # the view can mutate src's bytes without touching src's
+                # lock state: an in-flight spill snapshot of src is stale
+                src.version += 1
                 self.stats.bytes_zero_copy += msg.size
                 # dst gained an ancestor: cached chains keyed by (or passing
                 # through) dst are stale, and every EDT's cached §6.2 result
@@ -1016,6 +1342,7 @@ class Runtime:
             else:
                 sbuf = self._materialize(src)
                 dbuf = self._materialize(dst)
+                dst.version += 1
                 dbuf[msg.dst_offset: msg.dst_offset + msg.size] = \
                     sbuf[msg.src_offset: msg.src_offset + msg.size]
                 self.stats.bytes_copied += msg.size
@@ -1028,6 +1355,7 @@ class Runtime:
             else:
                 sbuf = self._materialize(src)
                 dbuf = self._materialize(dst)
+                dst.version += 1
                 dbuf[msg.dst_offset: msg.dst_offset + msg.size] = \
                     sbuf[msg.src_offset: msg.src_offset + msg.size]
                 self.stats.bytes_copied += msg.size
@@ -1035,6 +1363,7 @@ class Runtime:
         else:
             sbuf = self._materialize(src)
             dbuf = self._materialize(dst)
+            dst.version += 1
             dbuf[msg.dst_offset: msg.dst_offset + msg.size] = \
                 sbuf[msg.src_offset: msg.src_offset + msg.size]
             self.stats.bytes_copied += msg.size
@@ -1054,13 +1383,22 @@ class Runtime:
             if db is None:
                 return                       # destroyed while in flight
             db.io_pending = False
-            if not op.performed and db.buffer is None and db.lazy_file_read:
-                db.buffer = _read_file_region(op.path, op.offset, op.size)
-                db.lazy_file_read = False
-                self.stats.file_bytes_read += op.size
+            if not op.performed and db.buffer is None:
+                if db.spilled and op.file is None:
+                    # re-materialization of a spilled block (spill-file read)
+                    db.buffer = _read_file_region(op.path, op.offset, op.size)
+                    self._clear_spill(db)
+                    self.nodes[db.guid.node].resident_dbs += 1
+                elif db.lazy_file_read:
+                    db.buffer = _read_file_region(op.path, op.offset, op.size)
+                    db.lazy_file_read = False
+                    self.stats.file_bytes_read += op.size
+                    self.nodes[db.guid.node].resident_dbs += 1
             self._log("IO done (read)", op.db)
             # grants deferred on the IO-pending block retry now
             self._wake_waiters(db.guid)
+        elif op.kind == "spill":
+            self._finish_spill(op)
         else:
             if not op.performed and op.data is not None:
                 _write_file_region(op.path, op.offset,
@@ -1104,6 +1442,10 @@ class Runtime:
                         return self.force_resolve(lid, ctx)
             raise OcrError(f"no pending creation for {lid}")
         self._cancelled.add(msg.uid)
+        if not self.nodes[msg.dst_node].alive:
+            raise OcrError(
+                f"cannot resolve {lid}: its creation targets node "
+                f"{msg.dst_node}, which fail-stopped")
         # resolve any other lids the creation itself depends on
         for l in msg.lids():
             if l != lid and isinstance(l, Lid):
@@ -1183,7 +1525,7 @@ class TaskCtx:
 
     def edt_template_create(self, func: Callable, paramc: int, depc: int) -> Guid:
         g = self.rt._alloc_guid(self.node, ObjectKind.TEMPLATE)
-        self.rt.nodes[self.node].objects[g] = TemplateObj(g, func, paramc, depc)
+        self.rt.nodes[self.node].objects.insert(TemplateObj(g, func, paramc, depc))
         return g
 
     def edt_template_destroy(self, tmpl: Guid) -> None:
@@ -1247,11 +1589,31 @@ class TaskCtx:
 
     # -- events ---------------------------------------------------------------
 
-    def event_create(self, kind: EventKind = EventKind.ONCE, latch_count: int = 0) -> Guid:
-        g = self.rt._alloc_guid(self.node, ObjectKind.EVENT)
-        ev = EventObj(g, kind, latch_count=latch_count)
-        self.rt.nodes[self.node].objects[g] = ev
-        return g
+    def _remote_create(self, kind: str, payload: Dict[str, Any],
+                       target: int, props: int) -> Any:
+        """§3 remote creation: ``EDT_PROP_LID`` returns a LID immediately
+        (the ``MCreate`` travels with it), otherwise the call blocks one
+        round-trip for the real GUID — shared by db/event creation."""
+        if props & EDT_PROP_LID:
+            lid = self.rt._alloc_lid(self.node)
+            self.rt.send(MCreate(kind=kind, lid=lid, payload=payload),
+                         self.node, target, at=self.now)
+            return lid
+        self.rt.stats.blocking_roundtrips += 1
+        self.blocking_time += 2 * self.rt.net_latency
+        return self.rt._create_object(target, kind, payload)
+
+    def event_create(self, kind: EventKind = EventKind.ONCE, latch_count: int = 0,
+                     placement: Optional[int] = None, props: int = 0) -> Any:
+        """``ocrEventCreate``.  Local by default; with a remote ``placement``
+        the event is created through the §3 ``MCreate`` path — ``EDT_PROP_LID``
+        returns a LID immediately, otherwise one blocking round-trip."""
+        payload = dict(kind=kind, latch_count=latch_count)
+        target = self.node if placement is None \
+            else self.rt._pick_node(placement)
+        if target == self.node:
+            return self.rt._create_event(self.node, payload).guid
+        return self._remote_create("event", payload, target, props)
 
     def event_satisfy(self, event: Any, db: Any = NULL_GUID) -> None:
         tgt = self.rt.resolve(event)
@@ -1266,6 +1628,11 @@ class TaskCtx:
                        mode: DbMode = DbMode.RO) -> None:
         src = self.rt.resolve(source)
         dst = self.rt.resolve(dest)
+        if isinstance(src, Guid) and not is_null(src) \
+                and not self.rt.nodes[src.node].alive:
+            raise OcrError(
+                f"dependence on {src}: node {src.node} fail-stopped "
+                f"and its objects are lost")
         route = self.node if (is_null(src) or not isinstance(src, Guid)) \
             else src.node
         self.rt.send(MDep(source=src, dest=dst, slot=slot, mode=mode),
@@ -1273,21 +1640,29 @@ class TaskCtx:
 
     # -- data blocks ------------------------------------------------------------
 
-    def db_create(self, size: int, props: int = 0) -> Tuple[Guid, Optional[np.ndarray]]:
-        g = self.rt._alloc_guid(self.node, ObjectKind.DATABLOCK)
-        no_acq = bool(props & DB_PROP_NO_ACQUIRE)
-        db = DbObj(guid=g, size=size, node=self.node, no_acquire=no_acq)
-        db.ready = True
-        db.pending_deps = []
-        if not no_acq:
-            db.buffer = np.zeros(size, dtype=np.uint8)
-        self.rt.nodes[self.node].objects[g] = db
-        return g, db.buffer
+    def db_create(self, size: int, props: int = 0,
+                  placement: Optional[int] = None) -> Tuple[Any, Optional[np.ndarray]]:
+        """``ocrDbCreate``.  Returns ``(id, ptr)``.
+
+        Local by default.  With a remote ``placement`` the block is created
+        on the target node through the §3 ``MCreate`` path and ``ptr`` is
+        None (remote memory is only reachable through an acquire):
+        ``EDT_PROP_LID`` returns a LID immediately, otherwise the call
+        blocks one round-trip for the GUID.
+        """
+        payload = dict(size=size, props=props)
+        target = self.node if placement is None \
+            else self.rt._pick_node(placement)
+        if target == self.node:
+            db = self.rt._create_db(self.node, payload)
+            return db.guid, db.buffer
+        return self._remote_create("db", payload, target, props), None
 
     def db_release(self, db: Any) -> None:
         d: DbObj = self.rt.lookup(self.rt.resolve(db))
         if self.edt is not None and d.writer == self.edt.guid:
             d.writer = None
+            self.rt.nodes[d.guid.node].spill_scan_at = -1.0
             if d.pending_destroy and not d.locked():
                 self.rt._destroy_db(d)   # wakes its waiters itself
             else:
@@ -1319,6 +1694,9 @@ class TaskCtx:
                     raise PartitionOverlapError(
                         f"requested partitions [{o},+{s}) and [{o2},+{s2}) overlap")
         buf = self.rt._materialize(parent)
+        # children write through the parent's buffer without touching its
+        # lock state or version: abort any in-flight spill snapshot
+        parent.version += 1
         out = []
         for (o, s) in parts:
             g = self.rt._alloc_guid(parent.guid.node, ObjectKind.DATABLOCK)
@@ -1333,7 +1711,7 @@ class TaskCtx:
                           file_offset=parent.file_offset + o)
             child.ready = True
             child.pending_deps = []
-            self.rt.nodes[parent.guid.node].objects[g] = child
+            self.rt.nodes[parent.guid.node].objects.insert(child)
             parent.partitions[g] = (o, s)
             out.append(g)
         if props & OCR_DB_PARTITION_STATIC:
@@ -1355,11 +1733,11 @@ class TaskCtx:
 
     def map_create(self, size: int, creator: Callable, paramv: Sequence[Any] = (),
                    guidv: Sequence[Any] = (), placement: Optional[int] = None) -> Guid:
-        node = self.node if placement is None else placement % self.rt.num_nodes
+        node = self.node if placement is None else self.rt._pick_node(placement)
         g = self.rt._alloc_guid(node, ObjectKind.MAP)
-        self.rt.nodes[node].objects[g] = MapObj(
+        self.rt.nodes[node].objects.insert(MapObj(
             guid=g, size=size, creator=creator,
-            paramv=tuple(paramv), guidv=tuple(guidv))
+            paramv=tuple(paramv), guidv=tuple(guidv)))
         return g
 
     def map_get(self, map_id: Any, index: int) -> Any:
@@ -1387,7 +1765,7 @@ class TaskCtx:
         if mode == "wb+":
             with open(path, "w+b"):
                 pass
-        self.rt.nodes[self.node].objects[g] = f
+        self.rt.nodes[self.node].objects.insert(f)
         desc, _ = self.db_create(16)
         d: DbObj = self.rt.lookup(desc)
         d.ready = False
@@ -1428,7 +1806,7 @@ class TaskCtx:
                    file_offset=offset, lazy_file_read=not write_only)
         db.ready = True
         db.pending_deps = []
-        self.rt.nodes[self.node].objects[g] = db
+        self.rt.nodes[self.node].objects.insert(db)
         f.chunks[g] = (offset, size)
         if db.lazy_file_read and self.rt.io_mode == "async" \
                 and self.rt.read_ahead:

@@ -1,0 +1,439 @@
+"""Sharded per-node GUID tables (§2 structure-in-the-identifier storage).
+
+Covers the :class:`repro.core.objects.ObjectTable` itself (O(1) arithmetic
+shard routing, per-shard live/destroyed counts, empty-shard reclamation),
+the ``Stats.table_*`` gauges, the fail-stop semantics rebuilt on top of it
+(a dead node's objects are *lost*: clean ``OcrError``, spilled files
+reclaimed), the destroyed-map ``map_get`` guard, and remote db/event
+creation through the §3 ``MCreate`` path.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (DbMode, EDT_PROP_LID, EventKind, GUID_SHARD_BITS,
+                        Guid, Lid, NULL_GUID, ObjectKind, ObjectTable,
+                        OcrError, Runtime, shard_index, shard_of, shard_span,
+                        spawn_main)
+
+
+@dataclasses.dataclass
+class _Obj:
+    guid: Guid
+
+
+def _mk(seq, kind=ObjectKind.DATABLOCK, node=0):
+    return _Obj(Guid(node, seq, kind))
+
+
+# --------------------------------------------------------------- shard helpers
+
+
+def test_shard_helpers_round_trip():
+    for bits in (2, GUID_SHARD_BITS, 12):
+        for seq in (0, 1, (1 << bits) - 1, 1 << bits, 12345):
+            idx = shard_index(seq, bits)
+            lo, hi = shard_span(idx, bits)
+            assert lo <= seq < hi
+            assert hi - lo == 1 << bits
+    g = Guid(3, 777, ObjectKind.MAP)
+    assert shard_of(g, 4) == (ObjectKind.MAP, 777 >> 4)
+
+
+# ----------------------------------------------------------------- ObjectTable
+
+
+def test_table_insert_get_pop_contains():
+    t = ObjectTable(shard_bits=2)
+    objs = [_mk(i) for i in range(1, 11)]
+    for o in objs:
+        t.insert(o)
+    assert len(t) == 10
+    for o in objs:
+        assert t.get(o.guid) is o
+        assert o.guid in t
+    # probes with reconstructed (non-identical) guids route identically
+    assert t.get(Guid(0, 5, ObjectKind.DATABLOCK)) is objs[4]
+    # misses: unknown seq, unknown kind, sentinel, and a Lid probe
+    assert t.get(Guid(0, 99, ObjectKind.DATABLOCK)) is None
+    assert t.get(Guid(0, 5, ObjectKind.EVENT)) is None
+    assert t.get(NULL_GUID) is None
+    assert t.get(Lid(0, 5)) is None
+    assert t.pop(Lid(0, 5)) is None
+    got = t.pop(objs[0].guid)
+    assert got is objs[0]
+    assert t.pop(objs[0].guid) is None
+    assert len(t) == 9
+
+
+def test_table_items_values_iter_mixed_kinds():
+    t = ObjectTable(shard_bits=2)
+    a, b = _mk(1), _mk(2, ObjectKind.EVENT)
+    t.insert(a)
+    t[b.guid] = b          # dict-compat setitem
+    assert dict(t.items()) == {a.guid: a, b.guid: b}
+    assert set(t) == {a.guid, b.guid}
+    assert t[a.guid] is a
+    with pytest.raises(KeyError):
+        t[Guid(0, 9, ObjectKind.MAP)]
+
+
+def test_table_shard_counts_and_reclamation():
+    t = ObjectTable(shard_bits=2)          # 4 seqs per shard
+    for i in range(1, 9):                  # seqs 1..8 -> shards 0,1,2
+        t.insert(_mk(i))
+    assert t.shard_count() == 3
+    assert t.live_count(ObjectKind.DATABLOCK) == 8
+    assert t.hot_shard_count() == 3
+    # drain shard 1 (seqs 4..7): it is reclaimed wholesale, its destroyed
+    # count surviving in the per-kind aggregate
+    for i in range(4, 8):
+        t.pop(Guid(0, i, ObjectKind.DATABLOCK))
+    assert t.shard_count() == 2
+    assert t.destroyed_count(ObjectKind.DATABLOCK) == 4
+    assert t.live_count(ObjectKind.DATABLOCK) == 4
+    # per-shard destroyed counts stay visible on live shards
+    t.pop(Guid(0, 1, ObjectKind.DATABLOCK))
+    (idx0, sh0), (idx2, sh2) = t.shards(ObjectKind.DATABLOCK)
+    assert (idx0, idx2) == (0, 2)
+    assert sh0.destroyed == 1 and sh2.destroyed == 0
+    assert t.destroyed_count(ObjectKind.DATABLOCK) == 5
+
+
+def test_table_spilled_marks_drive_hot_shards():
+    t = ObjectTable(shard_bits=2)
+    for i in range(4, 8):                  # exactly one shard (idx 1)
+        t.insert(_mk(i))
+    assert t.hot_shard_count() == 1
+    for i in range(4, 8):
+        t.note_spilled(Guid(0, i, ObjectKind.DATABLOCK))
+    assert t.hot_shard_count() == 0        # fully spilled shard is cold
+    t.note_unspilled(Guid(0, 4, ObjectKind.DATABLOCK))
+    assert t.hot_shard_count() == 1
+
+
+def test_table_clear_is_bulk():
+    t = ObjectTable(shard_bits=2)
+    for i in range(1, 20):
+        t.insert(_mk(i))
+    t.clear()
+    assert len(t) == 0 and t.shard_count() == 0
+    assert t.destroyed_count(ObjectKind.DATABLOCK) == 19
+
+
+def test_runtime_stats_gauges():
+    rt = Runtime(shard_bits=2)
+    keep = []
+
+    def main(paramv, depv, api):
+        for _ in range(10):
+            g, _ = api.db_create(8)
+            keep.append(g)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.table_shards >= 3          # 10 DBs at 4 seqs/shard
+    assert 0 < stats.table_hot_shards <= stats.table_shards
+    assert stats.spilled_objects == 0       # spill disabled by default
+
+
+# ------------------------------------------------------------------ fail-stop
+
+
+def test_failstop_loses_objects_clean_ocr_error():
+    """Satellite regression: a survivor acquiring a dead node's DB gets a
+    clean OcrError, not a silently-served stale object."""
+    rt = Runtime(num_nodes=2)
+    made = {}
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(64, placement=1)      # lives on node 1
+        made["db"] = db
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    dead_db = made["db"]
+    assert rt.lookup(dead_db).node == 1
+
+    rt.kill_node(1)
+    # direct lookup: clean error naming the fail-stop
+    with pytest.raises(OcrError, match="fail-stopped"):
+        rt.lookup(dead_db)
+    assert rt.try_lookup(dead_db) is None
+    # the dead node's tables are actually dropped
+    assert len(rt.nodes[1].objects) == 0
+    assert not rt.nodes[1].lid_table
+
+    # a survivor wiring an acquire of the dead DB fails loudly too
+    # (zero-dep main bodies run synchronously at spawn)
+    def survivor(paramv, depv, api):
+        tmpl = api.edt_template_create(lambda p, d, a: NULL_GUID, 0, 1)
+        api.edt_create(tmpl, depv=[dead_db], dep_modes=[DbMode.RO],
+                       placement=0)
+        return NULL_GUID
+
+    with pytest.raises(OcrError, match="fail-stopped"):
+        spawn_main(rt, survivor)
+        rt.run()
+
+    # and explicit placement on the dead node is rejected outright
+    def placer(paramv, depv, api):
+        api.db_create(8, placement=1)
+        return NULL_GUID
+
+    with pytest.raises(OcrError, match="fail-stopped"):
+        spawn_main(rt, placer)
+        rt.run()
+
+
+def test_failstop_reclaims_spill_file(tmp_path):
+    """A dead node's spilled objects are unreachable and its spill file is
+    deleted from disk."""
+    rt = Runtime(num_nodes=2, spill_threshold=0, io_latency=1.0)
+    made = []
+
+    def maker(paramv, depv, api):
+        for i in range(4):
+            g, buf = api.db_create(32)
+            buf[:] = i + 1
+            made.append(g)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(maker, 0, 0)
+        api.edt_create(tmpl, depv=[], placement=1)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.spilled_objects == 4
+    spill_path = rt.nodes[1].spill_path
+    assert spill_path is not None and os.path.exists(spill_path)
+
+    rt.kill_node(1)
+    assert rt.stats.spilled_objects == 0
+    assert not os.path.exists(spill_path)
+    assert rt.nodes[1].spill_path is None
+    with pytest.raises(OcrError, match="fail-stopped"):
+        rt.lookup(made[0])
+
+
+def test_failstop_force_resolve_rejects_dead_target():
+    """force_resolve must not create objects on a fail-stopped node."""
+    rt = Runtime(num_nodes=2, net_latency=5.0)
+    out = {}
+
+    def main(paramv, depv, api):
+        out["lid"], _ = api.db_create(64, props=EDT_PROP_LID, placement=1)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    # kill before the MCreate lands: the pending creation dies with node 1
+    rt.kill_node(1)
+    rt.run()
+    from repro.core import TaskCtx
+    ctx = TaskCtx(rt, 0, None)
+    with pytest.raises(OcrError, match="fail-stopped"):
+        ctx.get_guid(out["lid"])
+    assert len(rt.nodes[1].objects) == 0
+
+
+def test_failstop_wakes_parked_survivor_with_error():
+    """An EDT already parked in a dead node's waiter queue fails loudly on
+    the next run instead of hanging silently forever."""
+    rt = Runtime(num_nodes=2)
+    made = {}
+
+    def writer(paramv, depv, api):
+        return NULL_GUID
+
+    def reader(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(32, placement=1)
+        made["db"] = db
+        wt = api.edt_template_create(writer, 0, 1)
+        api.edt_create(wt, depv=[db], dep_modes=[DbMode.EW], duration=20.0,
+                       placement=0)
+        rtm = api.edt_template_create(reader, 0, 1)
+        api.edt_create(rtm, depv=[db], dep_modes=[DbMode.RO], placement=0)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run(until=10.0)          # writer holds the DB, reader is parked
+    rt.kill_node(1)
+    with pytest.raises(OcrError, match="fail-stopped"):
+        rt.run()
+
+
+def test_failstop_from_own_task_body():
+    """A task body fail-stopping its *own* node (the trainer's injected
+    failure) must not crash the runtime at the task's retirement."""
+    rt = Runtime(num_nodes=2)
+    ran = []
+
+    def suicidal(paramv, depv, api):
+        api.rt.kill_node(api.node)
+        return NULL_GUID
+
+    def late(paramv, depv, api):
+        ran.append("late")
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(suicidal, 0, 0)
+        _, ev = api.edt_create(tmpl, depv=[], placement=1,
+                               output_event=True)
+        # gated on the dead task's output event: must never fire
+        lt = api.edt_template_create(late, 0, 1)
+        api.edt_create(lt, depv=[ev], dep_modes=[DbMode.NULL], placement=0)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()                      # completes without raising
+    assert not rt.nodes[1].alive
+    assert ran == []              # nothing downstream of the dead task ran
+
+
+# ---------------------------------------------------- destroyed-map map_get
+
+
+def test_map_destroy_then_get_is_clean_ocr_error():
+    """Satellite regression: map_get racing map_destroy must raise a clean
+    OcrError instead of touching the destroyed map's entries/creator."""
+    rt = Runtime()
+
+    def creator(api, lid, index, paramv, guidv):
+        tmpl = api.edt_template_create(lambda p, d, a: NULL_GUID, 0, 1)
+        api.edt_create(tmpl, depv=[NULL_GUID], props=0x2, mapped_id=lid)
+
+    def main(paramv, depv, api):
+        m = api.map_create(4, creator)
+        api.map_destroy(m)
+        api.map_get(m, 0)       # same timestamp, ordered after the destroy
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    with pytest.raises(OcrError, match="destroyed or unknown map"):
+        rt.run()
+
+
+def test_map_get_then_destroy_still_works():
+    rt = Runtime()
+    seen = {}
+
+    def creator(api, lid, index, paramv, guidv):
+        tmpl = api.edt_template_create(lambda p, d, a: NULL_GUID, 0, 1)
+        api.edt_create(tmpl, depv=[NULL_GUID], props=0x2, mapped_id=lid)
+
+    def main(paramv, depv, api):
+        m = api.map_create(4, creator)
+        seen["lid"] = api.map_get(m, 0)     # ordered before the destroy
+        api.map_destroy(m)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.creator_calls == 1
+    assert rt.resolve(seen["lid"]) != seen["lid"]   # resolved to a guid
+
+
+# ------------------------------------------------------- remote db/event create
+
+
+def test_remote_db_create_lid_path():
+    """A placed db_create with EDT_PROP_LID rides the deferred-LID MCreate
+    path instead of dying with 'unsupported remote-create kind'."""
+    rt = Runtime(num_nodes=2, net_latency=5.0)
+    out = {}
+
+    def main(paramv, depv, api):
+        lid, ptr = api.db_create(64, props=EDT_PROP_LID, placement=1)
+        assert ptr is None                     # remote memory: no local ptr
+        out["guid"] = api.get_guid(lid)        # §3 forced resolution
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    g = out["guid"]
+    assert g.node == 1 and g.kind == ObjectKind.DATABLOCK
+    assert rt.lookup(g).size == 64
+
+
+def test_remote_db_create_flows_into_dependences():
+    """Remote-created DB (blocking path) is acquirable end to end."""
+    rt = Runtime(num_nodes=2, net_latency=2.0)
+    seen = {}
+
+    def reader(paramv, depv, api):
+        seen["bytes"] = bytes(depv[0].ptr)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, ptr = api.db_create(16, placement=1)
+        assert ptr is None and db.node == 1
+        # fill it through a writer EDT on the owning node
+        def writer(p, d, a):
+            d[0].ptr[:] = 7
+            return NULL_GUID
+        wt = api.edt_template_create(writer, 0, 1)
+        _, ev = api.edt_create(wt, depv=[db], dep_modes=[DbMode.EW],
+                               placement=1, output_event=True)
+        rt_ = api.edt_template_create(reader, 0, 2)
+        api.edt_create(rt_, depv=[db, ev],
+                       dep_modes=[DbMode.RO, DbMode.NULL])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.blocking_roundtrips >= 1      # the blocking create path
+    assert seen["bytes"] == b"\x07" * 16
+
+
+def test_remote_event_create_and_satisfy():
+    rt = Runtime(num_nodes=2, net_latency=2.0)
+    ran = []
+
+    def main(paramv, depv, api):
+        ev = api.event_create(EventKind.STICKY, placement=1)
+        assert ev.node == 1 and ev.kind == ObjectKind.EVENT
+        tmpl = api.edt_template_create(
+            lambda p, d, a: ran.append(True) and NULL_GUID or NULL_GUID, 0, 1)
+        api.edt_create(tmpl, depv=[ev], dep_modes=[DbMode.NULL])
+        api.event_satisfy(ev)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert ran == [True]
+
+
+def test_remote_event_create_lid_path():
+    rt = Runtime(num_nodes=2, net_latency=5.0)
+    out = {}
+
+    def main(paramv, depv, api):
+        lid = api.event_create(EventKind.STICKY, placement=1,
+                               props=EDT_PROP_LID)
+        out["lid"] = lid
+        api.event_satisfy(lid)                 # LID-referencing msg defers
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    g = rt.resolve(out["lid"])
+    assert isinstance(g, Guid) and g.node == 1
+    assert rt.lookup(g).satisfied
+
+
+def test_unsupported_remote_create_kind_is_actionable():
+    rt = Runtime(num_nodes=2)
+    with pytest.raises(OcrError, match="labeled map"):
+        rt._create_object(1, "map", {})
+    with pytest.raises(OcrError, match="only EDTs, data blocks and events"):
+        rt._create_object(1, "file", {})

@@ -1,0 +1,484 @@
+"""Cold-object spill: idle unlocked data blocks past ``spill_threshold``
+write back through the §5 IO queue (one op per shard) and re-materialize
+through the same grant-deferral path as IO-pending file chunks.
+
+Contracts under test: spill → re-acquire round-trips bit-exact payloads;
+``run(until)`` / fail-stop lose exactly the in-flight spill ops (PR 3's IO
+crash semantics — never object payloads); ``Stats.spilled_objects`` counts
+match the per-node and per-shard accounting; a racing write aborts a stale
+spill snapshot.
+
+``REPRO_IO_LATENCY`` sweeps the disk latency (CI runs 0 and 1.0); tests
+whose assertions need a wide in-flight window pin their own.
+"""
+import os
+
+import pytest
+
+from repro.core import DbMode, NULL_GUID, OcrError, Runtime, spawn_main
+
+L = float(os.environ.get("REPRO_IO_LATENCY", "1.0"))
+
+
+def _mk_runtime(**kw):
+    kw.setdefault("io_latency", L)
+    kw.setdefault("shard_bits", 2)
+    return Runtime(**kw)
+
+
+def _make_dbs(api, n, size=16, payload_of=lambda i: i + 1):
+    out = []
+    for i in range(n):
+        g, buf = api.db_create(size)
+        buf[:] = payload_of(i)
+        out.append((g, bytes(buf)))
+    return out
+
+
+def _assert_resident_counter_consistent(rt):
+    """The incremental per-node resident counter must match a full scan."""
+    from repro.core import ObjectKind
+    for node in rt.nodes:
+        scan = sum(1 for _i, sh in node.objects.shards(ObjectKind.DATABLOCK)
+                   for o in sh.objs.values()
+                   if o.buffer is not None and not o.is_view)
+        assert node.resident_dbs == scan, (node.idx, node.resident_dbs, scan)
+
+
+def test_spill_roundtrip_bit_exact():
+    """Spill then re-acquire: payloads survive the disk round trip."""
+    rt = _mk_runtime(spill_threshold=2)
+    made = []
+
+    def maker(paramv, depv, api):
+        made.extend(_make_dbs(api, 8))
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    stats = rt.run()
+    # resident was 8 > 2: exactly 6 spill, never below the threshold
+    assert stats.spilled_objects == 6
+    assert rt.nodes[0].spilled == 6
+    spilled = [g for g, _ in made if rt.lookup(g).spilled]
+    assert len(spilled) == 6
+    for g in spilled:
+        assert rt.lookup(g).buffer is None
+    # one write-back op per spilled shard, not per object
+    shards = {g.seq >> rt.shard_bits for g in spilled}
+    assert stats.io_write_ops == len(shards) < 6
+
+    # re-acquire every block (spilled ones defer the grant, unspill through
+    # the IO queue, and wake exactly like IO-pending §5 chunks)
+    rt.spill_threshold = None
+    seen = {}
+
+    def reader(paramv, depv, api):
+        seen[depv[0].guid] = bytes(depv[0].ptr)
+        return NULL_GUID
+
+    def phase2(paramv, depv, api):
+        tmpl = api.edt_template_create(reader, 0, 1)
+        for g, _ in made:
+            api.edt_create(tmpl, depv=[g], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, phase2)
+    stats = rt.run()
+    assert stats.spilled_objects == 0
+    for g, payload in made:
+        assert seen[g] == payload
+        assert rt.lookup(g).buffer is not None
+    _assert_resident_counter_consistent(rt)
+
+
+def test_same_timestamp_release_rescans_past_fruitless_guard():
+    """A fruitless scan at clock T must not suppress the scan of a later
+    same-timestamp retirement that *released* blocks (the release clears
+    the guard)."""
+    rt = Runtime(io_latency=1.0, spill_threshold=0, shard_bits=2)
+    made = {}
+
+    def idle(paramv, depv, api):
+        return NULL_GUID
+
+    def holder(paramv, depv, api):
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        g, buf = api.db_create(16)
+        buf[:] = 3
+        made["db"] = g
+        # holder keeps the only block locked while main and idle retire
+        # (their scans are fruitless and arm the guard at t=1); holder's
+        # own retirement at the same t=1 releases it and must still spill
+        it = api.edt_template_create(idle, 0, 1)
+        api.edt_create(it, depv=[NULL_GUID], dep_modes=[DbMode.NULL])
+        ht = api.edt_template_create(holder, 0, 1)
+        api.edt_create(ht, depv=[g], dep_modes=[DbMode.EW])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.spilled_objects == 1
+    assert rt.lookup(made["db"]).spilled
+    _assert_resident_counter_consistent(rt)
+
+
+def test_partition_view_write_aborts_stale_spill_snapshot():
+    """A §6 partition child writing through the parent's buffer inside the
+    spill-op window must abort the parent's stale snapshot (view writes
+    bypass the parent's lock state — the PR 3 checkpoint pattern)."""
+    rt = Runtime(io_latency=10.0, spill_threshold=0, shard_bits=2)
+    made = {}
+    seen = {}
+    OLD, NEW = 4, 6
+
+    def delay(paramv, depv, api):
+        return NULL_GUID
+
+    def carve(paramv, depv, api):
+        # partition -> EW write -> destroy, all inside the parent's
+        # in-flight spill window
+        parent = made["db"]
+        child = api.db_partition(parent, [(0, 16)])[0]
+
+        def w(pv, dv, a):
+            dv[0].ptr[:] = NEW
+            a.db_destroy(dv[0].guid)
+            return NULL_GUID
+
+        wt = api.edt_template_create(w, 0, 1)
+        api.edt_create(wt, depv=[child], dep_modes=[DbMode.EW])
+        return NULL_GUID
+
+    def reader(paramv, depv, api):
+        seen["late"] = bytes(depv[0].ptr[:16])
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        g, buf = api.db_create(32)
+        buf[:] = OLD
+        made["db"] = g
+        # main retires at t=1 -> spill submitted, completes t=11;
+        # carve runs at t=3, its writer finishes t~4, all inside the window
+        dt = api.edt_template_create(delay, 0, 1)
+        _, ev = api.edt_create(dt, depv=[NULL_GUID], dep_modes=[DbMode.NULL],
+                               duration=2.0, output_event=True)
+        ct = api.edt_template_create(carve, 0, 1)
+        _, ev2 = api.edt_create(ct, depv=[ev], dep_modes=[DbMode.NULL],
+                                output_event=True)
+        # read well past the spill completion
+        _, ev3 = api.edt_create(dt, depv=[ev2], dep_modes=[DbMode.NULL],
+                                duration=15.0, output_event=True)
+        rtm = api.edt_template_create(reader, 0, 2)
+        api.edt_create(rtm, depv=[made["db"], ev3],
+                       dep_modes=[DbMode.RO, DbMode.NULL])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    # without the db_partition version bump the stale spill would win and
+    # the late read would re-materialize the OLD bytes
+    assert seen["late"] == bytes([NEW]) * 16
+    _assert_resident_counter_consistent(rt)
+
+
+def test_remote_release_spills_pure_data_holder_node():
+    """A node whose blocks are only ever locked by remote tasks has no
+    retirements of its own: the remote task's retirement must run the
+    spill check on the data-holder node too."""
+    rt = Runtime(num_nodes=2, io_latency=1.0, spill_threshold=0,
+                 shard_bits=2)
+    made = {}
+
+    def writer(paramv, depv, api):
+        depv[0].ptr[:] = 7
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        db, _ = api.db_create(32, placement=1)    # lives on node 1
+        made["db"] = db
+        wt = api.edt_template_create(writer, 0, 1)
+        api.edt_create(wt, depv=[db], dep_modes=[DbMode.EW], placement=0)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    assert stats.spilled_objects == 1
+    db = rt.lookup(made["db"])
+    assert db.spilled and db.buffer is None
+    assert rt.nodes[1].spill_path is not None
+    _assert_resident_counter_consistent(rt)
+
+
+def test_spill_counts_match_table_marks():
+    rt = _mk_runtime(spill_threshold=3)
+
+    def maker(paramv, depv, api):
+        _make_dbs(api, 10)
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    stats = rt.run()
+    assert stats.spilled_objects == 7
+    assert sum(n.spilled for n in rt.nodes) == stats.spilled_objects
+    from repro.core import ObjectKind
+    marks = sum(sh.spilled for _i, sh in
+                rt.nodes[0].objects.shards(ObjectKind.DATABLOCK))
+    assert marks == stats.spilled_objects
+    # a fully-spilled shard is no longer hot
+    assert stats.table_hot_shards < stats.table_shards
+
+
+def test_run_until_loses_exactly_inflight_spill_ops():
+    """Halting mid-spill loses the ops, not the payloads: buffers stay
+    resident and nothing is marked spilled (PR 3's fail-stop IO contract)."""
+    rt = Runtime(io_latency=5.0, spill_threshold=0, shard_bits=2)
+    made = []
+
+    def maker(paramv, depv, api):
+        made.extend(_make_dbs(api, 3))
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    # maker retires at t=1 (spill submitted); ops complete at t=6
+    rt.run(until=2.0)
+    assert rt.stats.spilled_objects == 0
+    for g, _ in made:
+        db = rt.lookup(g)
+        assert db.buffer is not None and db.spilling and not db.spilled
+    # resuming completes the spill
+    stats = rt.run()
+    assert stats.spilled_objects == 3
+    for g, _ in made:
+        assert rt.lookup(g).spilled
+
+
+def test_failstop_mid_spill_drops_ops_and_reclaims_file():
+    rt = Runtime(num_nodes=2, io_latency=5.0, spill_threshold=0, shard_bits=2)
+    made = []
+
+    def maker(paramv, depv, api):
+        made.extend(_make_dbs(api, 3))
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        tmpl = api.edt_template_create(maker, 0, 0)
+        api.edt_create(tmpl, depv=[], placement=1)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run(until=3.0)           # spill submitted on node 1, not yet done
+    spill_path = rt.nodes[1].spill_path
+    assert spill_path is not None and os.path.exists(spill_path)
+    rt.kill_node(1)
+    stats = rt.run()            # the in-flight MIoDone is dropped
+    assert stats.spilled_objects == 0
+    assert not os.path.exists(spill_path)
+    with pytest.raises(OcrError, match="fail-stopped"):
+        rt.lookup(made[0][0])
+
+
+def test_dirty_spilled_chunk_writes_back_real_bytes(tmp_path):
+    """Destroying a dirty spilled §5 chunk re-materializes from the spill
+    file and writes the *real* bytes back to the user file."""
+    path = str(tmp_path / "f.bin")
+    rt = Runtime(io_latency=1.0, spill_threshold=0, shard_bits=2)
+    keep = {}
+
+    def w(paramv, depv, api):
+        depv[0].ptr[:] = 9
+        return NULL_GUID
+
+    def delay(paramv, depv, api):
+        return NULL_GUID
+
+    def destroyer(paramv, depv, api):
+        db = api.rt.lookup(keep["chunk"])
+        assert db.spilled and db.buffer is None     # cold by now
+        api.db_destroy(keep["chunk"])
+        api.file_release(keep["fg"])
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        f, desc = api.file_open(path, "wb+")
+
+        def after(pv, dv, api2):
+            fg = api2.file_get_guid(dv[0].ptr)
+            keep["fg"] = fg
+            ch = api2.file_get_chunk(fg, 0, 32, write_only=True)
+            keep["chunk"] = ch
+            wt = api2.edt_template_create(w, 0, 1)
+            _, ev = api2.edt_create(wt, depv=[ch], dep_modes=[DbMode.EW],
+                                    output_event=True)
+            # wait out the spill (submitted when w retires) before destroy
+            dt = api2.edt_template_create(delay, 0, 1)
+            _, ev2 = api2.edt_create(dt, depv=[ev], dep_modes=[DbMode.NULL],
+                                     duration=5.0, output_event=True)
+            kt = api2.edt_template_create(destroyer, 0, 1)
+            api2.edt_create(kt, depv=[ev2], dep_modes=[DbMode.NULL])
+            return NULL_GUID
+
+        tmpl = api.edt_template_create(after, 0, 1)
+        api.edt_create(tmpl, depv=[desc])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    stats = rt.run()
+    # the destroyed chunk left the spill accounting (the file descriptor
+    # DB is still live and may legitimately stay spilled)
+    assert rt.try_lookup(keep["chunk"]) is None
+    assert stats.spilled_objects <= 1
+    _assert_resident_counter_consistent(rt)
+    import numpy as np
+    got = np.fromfile(path, np.uint8)
+    assert len(got) == 32 and (got == 9).all()
+
+
+def test_racing_write_aborts_stale_spill_snapshot():
+    """A block re-acquired RW while its spill op is in flight must keep its
+    live buffer: the spill snapshot is stale (version guard), and a later
+    re-spill writes the fresh bytes."""
+    rt = Runtime(io_latency=10.0, spill_threshold=0, shard_bits=2)
+    made = {}
+    seen = {}
+    OLD, NEW = 5, 8
+
+    def writer(paramv, depv, api):
+        depv[0].ptr[:] = NEW
+        return NULL_GUID
+
+    def delay(paramv, depv, api):
+        return NULL_GUID
+
+    def reader(paramv, depv, api):
+        seen["late"] = bytes(depv[0].ptr)
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        g, buf = api.db_create(16)
+        buf[:] = OLD
+        made["db"] = g
+        # delay the writer so it grants inside the spill window
+        # (main retires at t=1 -> spill submitted, completes t=11)
+        dt = api.edt_template_create(delay, 0, 1)
+        _, ev = api.edt_create(dt, depv=[NULL_GUID], dep_modes=[DbMode.NULL],
+                               duration=2.0, output_event=True)
+        wt = api.edt_template_create(writer, 0, 2)
+        _, ev2 = api.edt_create(wt, depv=[g, ev],
+                                dep_modes=[DbMode.EW, DbMode.NULL],
+                                output_event=True)
+        # read well after the spill op completed (t=11)
+        _, ev3 = api.edt_create(dt, depv=[ev2], dep_modes=[DbMode.NULL],
+                                duration=12.0, output_event=True)
+        rtm = api.edt_template_create(reader, 0, 2)
+        api.edt_create(rtm, depv=[g, ev3], dep_modes=[DbMode.RO, DbMode.NULL])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert seen["late"] == bytes([NEW]) * 16
+    # after the reader retires the block goes cold again and re-spills —
+    # with the fresh bytes, which a final re-acquire proves
+    db = rt.lookup(made["db"])
+    assert db.spilled and db.buffer is None
+    rt.spill_threshold = None
+
+    def phase2(paramv, depv, api):
+        rtm = api.edt_template_create(reader, 0, 1)
+        api.edt_create(rtm, depv=[made["db"]], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, phase2)
+    rt.run()
+    assert seen["late"] == bytes([NEW]) * 16
+
+
+def test_bufferless_blocks_do_not_count_as_resident():
+    """no_acquire / unread blocks hold no buffer: they must not push the
+    node over the threshold and trigger spurious spills."""
+    from repro.core import DB_PROP_NO_ACQUIRE
+    rt = _mk_runtime(spill_threshold=3)
+
+    def maker(paramv, depv, api):
+        for _ in range(5):
+            api.db_create(16, props=DB_PROP_NO_ACQUIRE)   # buffer None
+        _make_dbs(api, 2)                                 # resident
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    stats = rt.run()
+    assert stats.spilled_objects == 0      # 2 resident <= threshold 3
+
+
+def test_sync_mode_charges_unspill_read():
+    """Re-acquiring a spilled block under io_mode="sync" charges the
+    spill-file read to the task's blocking time (same disk model as the
+    async path — the sync baseline must not get free unspills)."""
+    rt = Runtime(io_latency=4.0, spill_threshold=0, shard_bits=2,
+                 io_mode="sync")
+    made = []
+    seen = {}
+
+    def maker(paramv, depv, api):
+        made.extend(_make_dbs(api, 1))
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    stats = rt.run()
+    assert stats.spilled_objects == 1
+    reads_before = stats.io_read_ops
+    rt.spill_threshold = None
+
+    def reader(paramv, depv, api):
+        seen["t"] = api.rt.clock
+        seen["bytes"] = bytes(depv[0].ptr)
+        return NULL_GUID
+
+    def phase2(paramv, depv, api):
+        tmpl = api.edt_template_create(reader, 0, 1)
+        api.edt_create(tmpl, depv=[made[0][0]], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    t0 = rt.clock
+    spawn_main(rt, phase2)
+    stats = rt.run()
+    assert seen["bytes"] == made[0][1]
+    assert stats.io_read_ops == reads_before + 1    # the unspill is charged
+    # the reader's window covers the charged read: one io_latency past the
+    # phase-2 start plus the phase-2 main's own duration
+    assert stats.makespan >= t0 + 4.0
+
+
+def test_spill_roundtrip_sync_io_mode():
+    """Sync IO mode re-materializes spilled blocks synchronously at
+    execution (no grant deferral) with the same bit-exact contract."""
+    rt = _mk_runtime(spill_threshold=0, io_mode="sync")
+    made = []
+    seen = {}
+
+    def maker(paramv, depv, api):
+        made.extend(_make_dbs(api, 4))
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    stats = rt.run()
+    assert stats.spilled_objects == 4
+
+    rt.spill_threshold = None
+
+    def reader(paramv, depv, api):
+        seen[depv[0].guid] = bytes(depv[0].ptr)
+        return NULL_GUID
+
+    def phase2(paramv, depv, api):
+        tmpl = api.edt_template_create(reader, 0, 1)
+        for g, _ in made:
+            api.edt_create(tmpl, depv=[g], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, phase2)
+    stats = rt.run()
+    assert stats.spilled_objects == 0
+    for g, payload in made:
+        assert seen[g] == payload
