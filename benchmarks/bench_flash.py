@@ -1,51 +1,74 @@
-"""Differentiable flash attention: Pallas kernels vs the jnp twin.
+"""Differentiable flash attention: Pallas kernels vs the jnp twin, swept.
 
 Times forward and backward (fwd+bwd of a scalar loss) through
 ``repro.kernels.flash_attention`` — the custom-VJP Pallas path (interpret
 mode on CPU, compiled on TPU) — against ``flash_attention_jnp``, the
 blockwise jnp oracle the training path used before the backward kernels
-existed.  Wall-clock only (no virtual time here), so the JSON keys use the
-``*_ms`` loose-threshold convention of ``scripts/bench_diff.py``.
+existed.  The sweep covers seq ∈ {256, 1024, 4096} × head_dim ∈ {64, 128},
+causal and sliding-window, with the trace-time autotuner choosing the
+kernel structure per shape (single-step megakernel, grid tiles, fused or
+two-call backward); each row reports the chosen blocks.
+
+Timing is min-of-reps (the robust estimator for a shared machine);
+iteration counts shrink with the shape so the S=4096 rows stay affordable.
+Wall-clock only (no virtual time here), so the JSON keys use the ``*_ms``
+loose-threshold convention of ``scripts/bench_diff.py``.
 """
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import autotune
 from repro.kernels import ops as kops
 from repro.models.attention import flash_attention_jnp
 
-B, S, H, KH, HD = 1, 256, 4, 2, 32
-BQ = BK = 64
+B, H, KH = 1, 4, 2
+SEQS = (256, 1024, 4096)
+HEAD_DIMS = (64, 128)
 WINDOW = 48
 
 
-def _data():
+def _data(seq: int, hd: int):
     ks = jax.random.split(jax.random.PRNGKey(0), 3)
-    q = jax.random.normal(ks[0], (B, S, H, HD))
-    k = jax.random.normal(ks[1], (B, S, KH, HD))
-    v = jax.random.normal(ks[2], (B, S, KH, HD))
+    q = jax.random.normal(ks[0], (B, seq, H, hd))
+    k = jax.random.normal(ks[1], (B, seq, KH, hd))
+    v = jax.random.normal(ks[2], (B, seq, KH, hd))
     return q, k, v
 
 
-def _time_ms(fn, *args, iters=3):
-    jax.block_until_ready(fn(*args))            # compile
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e3
+def _time_ms(fn, *args, reps=3, iters=2):
+    """Min over ``reps`` timing windows of ``iters`` calls each."""
+    jax.block_until_ready(fn(*args))            # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best * 1e3
 
 
-def _bench(window: int):
-    q, k, v = _data()
+def _plan(seq: int, hd: int, window: int) -> autotune.AttnPlan:
+    """The plan the kernel will choose for this row (for reporting)."""
+    backend = "interpret" if jax.default_backend() != "tpu" else "tpu"
+    return autotune.plan_attention(seq, seq, hd, hd, H // KH, KH, B, 32,
+                                   True, window, seq, backend=backend)
 
-    def fwd_pallas(q_, k_, v_):
-        return kops.flash_attention(q_, k_, v_, causal=True, window=window,
-                                    block_q=BQ, block_k=BK)
+
+def _bench(seq: int, hd: int, window: int):
+    q, k, v = _data(seq, hd)
+    # shrink the timing effort as the per-call cost grows
+    reps, iters = (3, 2) if seq <= 1024 else (2, 1)
+
+    fwd_pallas = jax.jit(functools.partial(
+        kops.flash_attention, causal=True, window=window))
 
     def fwd_jnp(q_, k_, v_):
         return flash_attention_jnp(q_, k_, v_, jnp.zeros((), jnp.float32),
-                                   True, window, BQ, BK)
+                                   True, window)
 
     grad_pallas = jax.jit(jax.grad(
         lambda q_, k_, v_: jnp.sum(fwd_pallas(q_, k_, v_)),
@@ -55,10 +78,13 @@ def _bench(window: int):
         argnums=(0, 1, 2)))
 
     return {
-        "fwd_pallas_ms": _time_ms(fwd_pallas, q, k, v),
-        "fwd_jnp_ms": _time_ms(fwd_jnp, q, k, v),
-        "bwd_pallas_ms": _time_ms(grad_pallas, q, k, v),
-        "bwd_jnp_ms": _time_ms(grad_jnp, q, k, v),
+        "fwd_pallas_ms": _time_ms(fwd_pallas, q, k, v,
+                                  reps=reps, iters=iters),
+        "fwd_jnp_ms": _time_ms(jax.jit(fwd_jnp), q, k, v,
+                               reps=reps, iters=iters),
+        "bwd_pallas_ms": _time_ms(grad_pallas, q, k, v,
+                                  reps=reps, iters=iters),
+        "bwd_jnp_ms": _time_ms(grad_jnp, q, k, v, reps=reps, iters=iters),
     }
 
 
@@ -68,34 +94,44 @@ _CACHE = {}
 def _results():
     if not _CACHE:
         t0 = time.perf_counter()
-        _CACHE["causal"] = _bench(0)
-        _CACHE["window"] = _bench(WINDOW)
+        for seq in SEQS:
+            for hd in HEAD_DIMS:
+                for variant, w in (("causal", 0), ("window", WINDOW)):
+                    _CACHE[(seq, hd, variant)] = _bench(seq, hd, w)
         _CACHE["wall_time_s"] = time.perf_counter() - t0
     return _CACHE
 
 
-def run():
+def _rows():
     res = _results()
+    for seq in SEQS:
+        for hd in HEAD_DIMS:
+            for variant, w in (("causal", 0), ("window", WINDOW)):
+                yield seq, hd, variant, w, res[(seq, hd, variant)]
+
+
+def run():
     rows = []
     mode = "interpret" if jax.default_backend() != "tpu" else "compiled"
-    for variant in ("causal", "window"):
-        w = WINDOW if variant == "window" else 0
-        for key, ms in res[variant].items():
-            rows.append((f"flash.{variant}_{key[:-3]}", f"{ms * 1e3:.0f}",
-                         f"{mode}; B={B} S={S} H={H}/{KH} bq={BQ} "
-                         f"bk={BK} window={w}"))
+    for seq, hd, variant, w, r in _rows():
+        blocks = _plan(seq, hd, w).describe()
+        for key, ms in r.items():
+            rows.append((f"flash.s{seq}_hd{hd}_{variant}_{key[:-3]}",
+                         f"{ms * 1e3:.0f}",
+                         f"{mode}; B={B} H={H}/{KH} window={w}; {blocks}"))
     return rows
 
 
 def summary():
     """Machine-readable snapshot for BENCH_flash.json (perf trajectory)."""
     res = _results()
-    out = {"seq": S, "heads": H, "kv_heads": KH, "block_q": BQ,
-           "block_k": BK, "window": WINDOW,
+    out = {"heads": H, "kv_heads": KH, "window": WINDOW,
            "wall_time_s": res["wall_time_s"]}
-    for variant in ("causal", "window"):
-        for key, ms in res[variant].items():
-            out[f"{variant}_{key}"] = ms
+    for seq, hd, variant, w, r in _rows():
+        prefix = f"s{seq}_hd{hd}_{variant}"
+        out[f"{prefix}_blocks"] = _plan(seq, hd, w).describe()
+        for key, ms in r.items():
+            out[f"{prefix}_{key}"] = ms
     return out
 
 

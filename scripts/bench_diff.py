@@ -7,8 +7,15 @@ annotation (``::warning::``) and is reported in the exit summary, but the
 exit code stays 0 — perf drift warns, it does not block (ROADMAP "perf
 trajectory").
 
+``--hard SECTION[,SECTION...]`` opts named sections (e.g. ``flash``) into
+fail-HARD mode: any key of theirs regressing beyond 20% exits non-zero.
+Use it for sections whose snapshot was measured on the CI runner class
+itself (the flash kernels-vs-twin sweep), where a >20% drift means a
+kernel or planner change, not runner noise.
+
 Usage:
   python scripts/bench_diff.py --new . --old benchmarks/snapshots
+  python scripts/bench_diff.py --new bench-out --hard flash
 """
 from __future__ import annotations
 
@@ -20,9 +27,11 @@ import sys
 
 MAKESPAN_THRESHOLD = 0.20      # virtual time: >20% regression warns
 WALL_THRESHOLD = 1.00          # wall time: noisy CI runners, warn at 2x
+HARD_THRESHOLD = 0.20          # --hard sections: >20% regression FAILS
 
 
-def compare(old: dict, new: dict, name: str) -> list[str]:
+def compare(old: dict, new: dict, name: str,
+            hard: bool = False) -> list[str]:
     warnings = []
     for key, ov in sorted(old.items()):
         nv = new.get(key)
@@ -30,7 +39,9 @@ def compare(old: dict, new: dict, name: str) -> list[str]:
             continue
         if ov <= 0 or nv <= 0:
             continue
-        if key.startswith("makespan"):
+        if hard:
+            threshold = HARD_THRESHOLD
+        elif key.startswith("makespan"):
             threshold = MAKESPAN_THRESHOLD
         elif key.endswith("_ms") or key.endswith("_s"):
             threshold = WALL_THRESHOLD
@@ -40,7 +51,8 @@ def compare(old: dict, new: dict, name: str) -> list[str]:
         if ratio > 1.0 + threshold:
             warnings.append(
                 f"{name}:{key} regressed {ratio:.2f}x "
-                f"({ov:.6g} -> {nv:.6g}, threshold +{threshold:.0%})")
+                f"({ov:.6g} -> {nv:.6g}, threshold +{threshold:.0%}"
+                f"{', HARD' if hard else ''})")
     return warnings
 
 
@@ -49,9 +61,15 @@ def main() -> None:
     ap.add_argument("--new", default=".", help="dir with fresh BENCH_*.json")
     ap.add_argument("--old", default="benchmarks/snapshots",
                     help="dir with committed snapshots")
+    ap.add_argument("--hard", default="", metavar="SECTION[,SECTION...]",
+                    help="sections (short names, e.g. 'flash') whose "
+                         f"regressions beyond {HARD_THRESHOLD:.0%} exit "
+                         "non-zero instead of warning")
     args = ap.parse_args()
+    hard_sections = {s.strip() for s in args.hard.split(",") if s.strip()}
 
     warnings = []
+    hard_failures = []
     compared = 0
     old_names = {os.path.basename(p) for p in
                  glob.glob(os.path.join(args.old, "BENCH_*.json"))}
@@ -59,7 +77,10 @@ def main() -> None:
                  glob.glob(os.path.join(args.new, "BENCH_*.json"))}
     for name in sorted(old_names):
         new_path = os.path.join(args.new, name)
+        section = name[len("BENCH_"):-len(".json")]
         if name not in new_names:
+            if section in hard_sections:
+                hard_failures.append(f"{name} missing from fresh run")
             print(f"::warning::bench_diff: {name} missing from fresh run")
             continue
         with open(os.path.join(args.old, name)) as f:
@@ -67,7 +88,11 @@ def main() -> None:
         with open(new_path) as f:
             new = json.load(f)
         compared += 1
-        warnings.extend(compare(old, new, name))
+        hard = section in hard_sections
+        found = compare(old, new, name, hard=hard)
+        warnings.extend(found)
+        if hard:
+            hard_failures.extend(found)
 
     # a fresh section with no committed snapshot is NOT silently skipped:
     # a newly added bench must enter the perf trajectory, so the unmatched
@@ -85,7 +110,12 @@ def main() -> None:
     for w in warnings:
         print(f"::warning::{w}")
         print(f"  {w}", file=sys.stderr)
-    # fail-soft: warnings annotate the run; the job stays green
+    # fail-soft by default: warnings annotate the run, the job stays
+    # green — EXCEPT --hard sections, whose regressions block
+    if hard_failures:
+        print(f"::error::bench_diff: {len(hard_failures)} hard "
+              f"regression(s) in --hard section(s)")
+        sys.exit(1)
 
 
 if __name__ == "__main__":

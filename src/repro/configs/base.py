@@ -72,8 +72,11 @@ class ModelConfig:
     optimizer_state_dtype: str = "float32"   # float32 | int8 (≥100B configs)
     loss_chunk: int = 1024           # sequence-chunked CE loss
     train_accum_steps: int = 1       # gradient accumulation microbatches
-    attn_block_q: int = 512          # flash-attention tile sizes
-    attn_block_k: int = 1024
+    # flash-attention tile OVERRIDES: None (default) lets the trace-time
+    # autotuner (repro.kernels.autotune) pick blocks per shape; ints pin
+    # a hand-tuned layout (fwd AND bwd tiles).
+    attn_block_q: Optional[int] = None
+    attn_block_k: Optional[int] = None
     attn_flash_min_seq: int = 2048   # below max(2·block_q, this): dense ref
     use_scan: bool = True            # lax.scan over layers (compile scalability)
     pure_dp: bool = False            # small models: batch over ALL mesh axes,
@@ -126,8 +129,6 @@ class ModelConfig:
             dtype="float32",
             param_dtype="float32",
             loss_chunk=32,
-            attn_block_q=16,
-            attn_block_k=16,
         )
 
 

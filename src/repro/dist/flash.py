@@ -41,15 +41,20 @@ from .sharding import ShardCtx, current_ctx, shard_map
 NEG_INF = -1e30
 
 
-def _blocks(cfg) -> Tuple[int, int, int]:
-    return (getattr(cfg, "attn_block_q", 512) or 512,
-            getattr(cfg, "attn_block_k", 1024) or 1024,
+def _blocks(cfg) -> Tuple[Optional[int], Optional[int], int]:
+    """Config tile overrides (None = let the trace-time autotuner pick)
+    and the flash threshold.  ``flash_min_seq`` derives its floor from
+    ``autotune.min_block()`` when no override pins a tile, so the
+    threshold and the planner can never disagree about the smallest
+    sequence worth tiling — fwd and bwd alike."""
+    return (getattr(cfg, "attn_block_q", None),
+            getattr(cfg, "attn_block_k", None),
             flash_min_seq(cfg))
 
 
 def _attn_local(q: jax.Array, k: jax.Array, v: jax.Array, *, window: int,
-                block_q: int, block_k: int, min_seq: int = 2048,
-                q_offset=0) -> jax.Array:
+                block_q: Optional[int], block_k: Optional[int],
+                min_seq: int = 2048, q_offset=0) -> jax.Array:
     """Single-shard causal attention: the differentiable Pallas flash
     kernel for long sequences (O(S) memory, custom-VJP backward kernels —
     training and inference take the same path), dense reference for short

@@ -21,6 +21,8 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import autotune
+
 # jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x;
 # resolve whichever this jax provides
 _COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) or \
@@ -77,16 +79,23 @@ def _decode_kernel(cur_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 
 
 def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
-                 cur_len: jax.Array, *, window: int = 0, block_s: int = 512,
+                 cur_len: jax.Array, *, window: int = 0,
+                 block_s: int | None = None,
                  interpret: bool = False) -> jax.Array:
     """q: (B, KH, G, hd); caches: (B, KH, S, hd); cur_len: () int32.
 
     Returns (B, KH, G, hd_v).  cur_len counts valid cache entries
     (the new token must already be written at cur_len − 1).
+    ``block_s=None`` asks the autotuner for a pow2 divisor of the cache
+    length sized to the VMEM budget.
     """
     b, kh, g, hd = q.shape
     s = k_cache.shape[2]
     hd_v = v_cache.shape[-1]
+    if block_s is None:
+        block_s = autotune.plan_decode(
+            s, g, hd, hd_v, q.dtype.itemsize * 8,
+            backend="interpret" if interpret else "tpu")
     block_s = min(block_s, s)
     assert s % block_s == 0
     ns = s // block_s

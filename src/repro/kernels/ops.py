@@ -26,13 +26,14 @@ def _default_interpret() -> bool:
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, q_offset=0.0, *, causal=True, window=0,
-                    block_q=128, block_k=128, interpret=None):
+                    block_q=None, block_k=None, interpret=None):
     """Model layout: q (B,S,H,hd), k/v (B,S,KH,hd) → (B,S,H,hd_v).
 
     Differentiable (custom-VJP backward kernels); ``q_offset`` is the
     global position of q row 0 under context-parallel stripes — a traced
     operand, not a static argument, so shard_map `axis_index` products
-    trace through.
+    trace through.  ``block_q``/``block_k`` default to the trace-time
+    autotuner (``repro.kernels.autotune``); ints pin the tiles.
     """
     interpret = _default_interpret() if interpret is None else interpret
     qt = jnp.transpose(q, (0, 2, 1, 3))
@@ -126,11 +127,12 @@ def multi_partition_copy_bytes(dst, src, ranges, *, block_rows=256,
 
 @functools.partial(jax.jit, static_argnames=("window", "block_s",
                                              "interpret"))
-def flash_decode(q, k_cache, v_cache, cur_len, *, window=0, block_s=512,
+def flash_decode(q, k_cache, v_cache, cur_len, *, window=0, block_s=None,
                  interpret=None):
     """Serving layout: q (B,1,H,hd), head-major caches (B,KH,S,hd).
 
-    Returns (B, 1, H, hd_v).  cur_len = valid entries incl. the new token.
+    Returns (B, 1, H, hd_v).  cur_len = valid entries incl. the new
+    token.  ``block_s`` defaults to ``autotune.plan_decode``.
     """
     interpret = _default_interpret() if interpret is None else interpret
     b, one, h, hd = q.shape

@@ -12,6 +12,16 @@ fallback.  Two kernels implement it:
   not be block-aligned; edge tiles are handled by a masked read-modify-write
   so untouched destination rows are preserved bit-exactly.
 
+Above :data:`DMA_STAGE_BYTES` of buffer, the batched kernel's
+whole-buffer VMEM residency stops being a plan (a 32 MiB spill buffer
+doesn't fit a 16 MiB VMEM), so ``multi_partition_copy`` re-stages: the
+buffers stay in HBM (``memory_space=pltpu.ANY``) and each grid step
+moves one autotuner-sized chunk through a double-buffered VMEM stage
+with explicit ``pltpu.make_async_copy`` DMAs — the next chunk's source
+fetch is in flight while the current chunk merges.  Same tables, same
+table order, same masked-RMW edge handling, so arrival-order/hazard
+semantics are identical to the batched path.
+
 dst/src are 2-D (N, 128) views of the flat byte buffers.
 """
 from __future__ import annotations
@@ -24,7 +34,19 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import autotune
+
 LANES = 128
+
+# Buffer size above which multi_partition_copy switches from whole-buffer
+# VMEM residency to the HBM-staged chunked-DMA kernel.
+DMA_STAGE_BYTES = 16 * 2 ** 20
+
+
+def dma_staged(dst_bytes: int, src_bytes: int) -> bool:
+    """True when a copy over buffers this large takes the DMA-staged
+    path (either buffer too big for whole-buffer VMEM residency)."""
+    return max(dst_bytes, src_bytes) > DMA_STAGE_BYTES
 
 
 def _copy_kernel(src_ref, dst_in_ref, o_ref):
@@ -96,6 +118,16 @@ def multi_partition_copy(dst: jax.Array, src: jax.Array,
     offsets but the same number of tiles reuse the compiled kernel.
     """
     assert dst.shape[1] == LANES and src.shape[1] == LANES
+    if dma_staged(dst.shape[0] * LANES * dst.dtype.itemsize,
+                  src.shape[0] * LANES * src.dtype.itemsize):
+        total = sum(r for (_, _, r) in ranges)
+        chunk = autotune.plan_copy_chunk(int(total))
+        d_tab, s_tab, n_tab = _block_tables(ranges, chunk)
+        if d_tab.shape[0] == 0:
+            return dst
+        return _multi_partition_copy_dma(
+            dst, src, jnp.asarray(d_tab), jnp.asarray(s_tab),
+            jnp.asarray(n_tab), chunk=chunk, interpret=interpret)
     d_tab, s_tab, n_tab = _block_tables(ranges, block_rows)
     if d_tab.shape[0] == 0:
         return dst
@@ -143,4 +175,93 @@ def _multi_partition_copy_impl(dst: jax.Array, src: jax.Array,
         interpret=interpret,
     )(jnp.asarray(d_tab), jnp.asarray(s_tab), jnp.asarray(n_tab),
       src_p, dst_p)
+    return out[:nd]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _multi_partition_copy_dma(dst: jax.Array, src: jax.Array,
+                              d_tab: jax.Array, s_tab: jax.Array,
+                              n_tab: jax.Array, *, chunk: int,
+                              interpret: bool) -> jax.Array:
+    """HBM-staged variant: buffers never become VMEM-resident blocks.
+
+    src/dst live in ``pltpu.ANY`` (HBM on hardware); each grid step
+    DMAs one ``chunk``-row table entry through a two-slot VMEM stage —
+    while chunk *i* merges, chunk *i+1*'s source fetch is already in
+    flight (started one step ahead on the other slot/semaphore pair).
+    The destination chunk is fetched, merged under the valid-row mask
+    (same edge treatment as the batched kernel), and DMA'd back before
+    the step ends, so table order — and therefore hazard/arrival
+    semantics — matches the batched path exactly.
+    """
+    total_blocks = int(d_tab.shape[0])
+    nd = dst.shape[0]
+    # pad by one chunk so edge tiles can move full-chunk DMAs; the
+    # masked merge keeps pad-row (and untouched-row) contents
+    dst_p = jnp.pad(dst, ((0, chunk), (0, 0)))
+    src_p = jnp.pad(src, ((0, chunk), (0, 0)))
+
+    def kernel(d_ref, s_ref, n_ref, src_ref, dst_in_ref, o_ref,
+               scr, sdst, sem_a, sem_b, sem_d, sem_o):
+        del dst_in_ref  # aliased with o_ref; RMW goes through o_ref
+        i = pl.program_id(0)
+        n = pl.num_programs(0)
+
+        def _src_copy(blk, slot, sem):
+            return pltpu.make_async_copy(
+                src_ref.at[pl.ds(s_ref[blk], chunk)], scr.at[slot], sem)
+
+        @pl.when(i == 0)
+        def _first():
+            _src_copy(0, 0, sem_a).start()
+
+        @pl.when(jnp.logical_and(i + 1 < n, (i + 1) % 2 == 0))
+        def _prefetch_even():
+            _src_copy(i + 1, 0, sem_a).start()
+
+        @pl.when(jnp.logical_and(i + 1 < n, (i + 1) % 2 == 1))
+        def _prefetch_odd():
+            _src_copy(i + 1, 1, sem_b).start()
+
+        def _merge(slot, sem):
+            _src_copy(i, slot, sem).wait()
+            dcp = pltpu.make_async_copy(
+                o_ref.at[pl.ds(d_ref[i], chunk)], sdst, sem_d)
+            dcp.start()
+            dcp.wait()
+            rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, LANES), 0)
+            scr[slot] = jnp.where(rows < n_ref[i], scr[slot], sdst[...])
+            ocp = pltpu.make_async_copy(
+                scr.at[slot], o_ref.at[pl.ds(d_ref[i], chunk)], sem_o)
+            ocp.start()
+            ocp.wait()
+
+        @pl.when(i % 2 == 0)
+        def _even():
+            _merge(0, sem_a)
+
+        @pl.when(i % 2 == 1)
+        def _odd():
+            _merge(1, sem_b)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(total_blocks,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.ANY),
+                  pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+        scratch_shapes=[
+            pltpu.VMEM((2, chunk, LANES), dst.dtype),
+            pltpu.VMEM((chunk, LANES), dst.dtype),
+            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA,
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_p.shape, dst_p.dtype),
+        input_output_aliases={4: 0},
+        interpret=interpret,
+    )(d_tab, s_tab, n_tab, src_p, dst_p)
     return out[:nd]

@@ -303,19 +303,26 @@ flash_attention_jnp.defvjp(_flash_fwd, _flash_bwd)
 # --------------------------------------------- Pallas training dispatcher
 
 def flash_min_seq(cfg) -> int:
-    """Sequence length above which training/prefill attention goes flash."""
-    return max(2 * getattr(cfg, "attn_block_q", 512),
-               getattr(cfg, "attn_flash_min_seq", 2048) or 2048)
+    """Sequence length above which training/prefill attention goes flash.
+
+    With no config override the floor comes from the autotuner's minimum
+    block (two q tiles must fit the sequence) instead of a fixed tile
+    constant — so the fwd threshold and the bwd kernels' planning agree.
+    """
+    from repro.kernels import autotune
+    bq = getattr(cfg, "attn_block_q", None) or autotune.min_block()
+    return max(2 * bq, getattr(cfg, "attn_flash_min_seq", 2048) or 2048)
 
 
 def flash_attention_train(q, k, v, q_offset=0.0, *, causal=True, window=0,
-                          block_q=512, block_k=1024):
+                          block_q=None, block_k=None):
     """Differentiable flash attention for training/prefill paths.
 
     Runs the Pallas kernel with its custom-VJP backward kernels
     (``repro.kernels.flash_attention``) — compiled on a TPU backend,
     interpret mode elsewhere, so the same grid/mask arithmetic executes
-    on every backend (CPU parity is the TPU kernel's oracle).
+    on every backend (CPU parity is the TPU kernel's oracle).  Blocks
+    default to the trace-time autotuner; pass ints to pin them.
     """
     from repro.kernels import ops as kernel_ops
     return kernel_ops.flash_attention(q, k, v, q_offset, causal=causal,
@@ -467,8 +474,10 @@ def mla_init(key, cfg) -> Params:
     }
 
 
-def _mla_qkv_full(params: Params, x: jax.Array, cfg, positions: jax.Array):
-    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+def _mla_latents(params: Params, x: jax.Array, cfg, positions: jax.Array):
+    """Shared low-rank projections: q_nope/q_rope per head, compressed
+    kv latent c_kv (b,s,rkv) and its rope key k_rope (b,s,1,dr)."""
+    dn = cfg.qk_nope_head_dim
     rkv = cfg.kv_lora_rank
     cq = rmsnorm(params["q_norm"], jnp.einsum("bsd,dr->bsr", x, params["w_dq"]),
                  cfg.norm_eps)
@@ -478,7 +487,13 @@ def _mla_qkv_full(params: Params, x: jax.Array, cfg, positions: jax.Array):
 
     dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
     c_kv = rmsnorm(params["kv_norm"], dkv[..., :rkv], cfg.norm_eps)
-    k_rope = apply_rope(dkv[..., None, rkv:], positions, cfg.rope_theta)  # (b,s,1,dr)
+    k_rope = apply_rope(dkv[..., None, rkv:], positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_qkv_full(params: Params, x: jax.Array, cfg, positions: jax.Array):
+    dr = cfg.qk_rope_head_dim
+    q_nope, q_rope, c_kv, k_rope = _mla_latents(params, x, cfg, positions)
     k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
     v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
 
@@ -488,25 +503,55 @@ def _mla_qkv_full(params: Params, x: jax.Array, cfg, positions: jax.Array):
     return q_full, k_full, v, c_kv, k_rope
 
 
+def _mla_absorbed_flash(params: Params, x: jax.Array, cfg,
+                        positions: jax.Array, q_offset=0.0):
+    """Absorbed-matrix MLA attention through the Pallas flash VJP.
+
+    Same absorption as ``mla_decode``, but differentiable and full
+    sequence: scores live in the compressed latent space, so the kernel
+    sees ONE kv head (MQA) of width rkv + dr — k = [c_kv, k_rope],
+    v = c_kv — and g = num_heads queries sharing it.  The up-projection
+    W_UV is applied to the kernel's latent output (attention is linear
+    in v, so p·(c_kv W_UV) == (p·c_kv) W_UV exactly).  The kernel
+    scales scores by 1/sqrt(rkv + dr); MLA semantics want
+    1/sqrt(dn + dr), so q is pre-scaled by the ratio.  Returns
+    (out_heads (b,s,h,dv), c_kv, k_rope) so prefill can reuse the
+    latents as its cache.
+    """
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    rkv = cfg.kv_lora_rank
+    q_nope, q_rope, c_kv, k_rope = _mla_latents(params, x, cfg, positions)
+    # absorb W_UK into the query path: q_latent (b,s,h,rkv)
+    q_latent = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])
+    q_eff = jnp.concatenate([q_latent, q_rope], axis=-1)
+    q_eff = q_eff * np.sqrt((rkv + dr) / (dn + dr)).astype(q_eff.dtype)
+    k_eff = jnp.concatenate([c_kv[:, :, None, :], k_rope], axis=-1)
+    v_eff = c_kv[:, :, None, :]
+    out_latent = flash_attention_train(q_eff, k_eff, v_eff, q_offset,
+                                       causal=True,
+                                       block_q=cfg.attn_block_q,
+                                       block_k=cfg.attn_block_k)
+    out = jnp.einsum("bshr,rhk->bshk", out_latent, params["w_uv"])
+    return out, c_kv, k_rope
+
+
 def mla_train(params: Params, x: jax.Array, cfg, positions: jax.Array) -> jax.Array:
-    q, k, v, _, _ = _mla_qkv_full(params, x, cfg, positions)
     seq = x.shape[1]
     if seq > flash_min_seq(cfg):
-        out = flash_attention_train(q, k, v, block_q=cfg.attn_block_q,
-                                    block_k=cfg.attn_block_k)
+        out, _, _ = _mla_absorbed_flash(params, x, cfg, positions)
     else:
+        q, k, v, _, _ = _mla_qkv_full(params, x, cfg, positions)
         out = full_attention(q, k, v, causal=True)
     return jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
 
 
 def mla_prefill(params: Params, x: jax.Array, cfg, positions: jax.Array
                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-    q, k, v, c_kv, k_rope = _mla_qkv_full(params, x, cfg, positions)
     seq = x.shape[1]
     if seq > flash_min_seq(cfg):
-        out = flash_attention_train(q, k, v, block_q=cfg.attn_block_q,
-                                    block_k=cfg.attn_block_k)
+        out, c_kv, k_rope = _mla_absorbed_flash(params, x, cfg, positions)
     else:
+        q, k, v, c_kv, k_rope = _mla_qkv_full(params, x, cfg, positions)
         out = full_attention(q, k, v, causal=True)
     o = jnp.einsum("bshk,hkd->bsd", out, params["w_o"])
     return o, {"c_kv": c_kv, "k_rope": k_rope[:, :, 0, :]}

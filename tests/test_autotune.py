@@ -1,0 +1,246 @@
+"""Trace-time block autotuner: planner invariants, gradcheck parity at
+autotuned (non-default) blocks, and the MLA absorbed-flash training path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels import autotune
+from repro.kernels import ops as kops
+from repro.models import attention
+
+
+# --------------------------------------------------------- planner units
+
+@pytest.mark.parametrize("sq,hd", [
+    (100, 16),      # ragged, below one default tile
+    (68, 64),       # context-parallel stripe size
+    (640, 64),      # non-pow2 multiple of MIN_BLOCK
+    (1024, 64),
+    (1024, 128),
+    (4096, 128),
+])
+def test_plan_bwd_blocks_divide_fwd_padded_seq(sq, hd):
+    """Every backward tile must divide the forward-padded sequence, so
+    the dq/dkv grids and the fused kernel revisit exactly the rows the
+    forward padded — no second padding pass, no overhang."""
+    plan = autotune.plan_attention(sq, sq, hd, hd, 2, 2, 1, 32,
+                                   True, 0, sq, backend="interpret")
+    sq_p = -(-sq // plan.block_q) * plan.block_q
+    sk_p = -(-sq // plan.block_k) * plan.block_k
+    assert sq_p % plan.dq_block_q == 0
+    assert sq_p % plan.dkv_block_q == 0
+    assert sk_p % plan.dq_block_k == 0
+    assert sk_p % plan.dkv_block_k == 0
+    assert plan.g_fold in (1, 2) and 2 % plan.g_fold == 0
+
+
+@pytest.mark.parametrize("budget_mb", [1, 2, 4])
+def test_plan_respects_vmem_budget(budget_mb):
+    """Unpinned plans never exceed the per-kernel VMEM budget — the hard
+    constraint of the cost model (checked on the tpu backend, whose mega
+    gate also runs under the same budget)."""
+    budget = budget_mb * 2 ** 20
+    plan = autotune.plan_attention(2048, 2048, 128, 128, 4, 2, 1, 32,
+                                   True, 0, 2048, backend="tpu",
+                                   vmem_budget=budget)
+    assert plan.vmem_bytes <= budget
+    # a 2048² problem's materialized softmax transients are way past a
+    # few MiB of VMEM: the single-step megakernels must be rejected
+    assert not plan.mega_fwd and not plan.mega_bwd
+
+
+def test_plan_budget_monotone_blocks():
+    """A larger budget never picks a *more* expensive plan: the best cost
+    under budget B is ≥ the best cost under B' > B (superset search)."""
+    small = autotune.plan_attention(1024, 1024, 128, 128, 2, 2, 1, 32,
+                                    True, 0, 1024, backend="tpu",
+                                    vmem_budget=2 * 2 ** 20)
+    large = autotune.plan_attention(1024, 1024, 128, 128, 2, 2, 1, 32,
+                                    True, 0, 1024, backend="tpu",
+                                    vmem_budget=12 * 2 ** 20)
+    assert small.vmem_bytes <= 2 * 2 ** 20
+    assert large.block_q * large.block_k >= small.block_q * small.block_k
+
+
+def test_edge_waste_zero_at_multiples_monotone_between():
+    block = 128
+    for m in (1, 2, 5):
+        assert autotune.edge_waste(m * block, block) == 0.0
+    # between multiples the dead fraction only shrinks as live rows grow
+    prev = float("inf")
+    for seq in range(129, 257):
+        w = autotune.edge_waste(seq, block)
+        assert w <= prev
+        assert w >= 0.0
+        prev = w
+    assert autotune.edge_waste(256, block) == 0.0
+
+
+def test_plan_override_pins_blocks_verbatim():
+    """Config overrides win over the model: odd hand-picked tiles ride
+    through to both fwd and bwd, and the structural escapes (mega
+    kernels) stay off so the pinned layout is what actually runs."""
+    plan = autotune.plan_attention(512, 512, 64, 64, 2, 2, 1, 32,
+                                   True, 0, 512, backend="interpret",
+                                   block_q=48, block_k=80)
+    assert plan.block_q == 48 and plan.block_k == 80
+    assert (plan.dq_block_q, plan.dq_block_k) == (48, 80)
+    assert (plan.dkv_block_q, plan.dkv_block_k) == (48, 80)
+    assert not plan.mega_fwd and not plan.mega_bwd
+    # clamped to the sequence, the historical min(block, seq) behavior
+    clamped = autotune.plan_attention(100, 100, 64, 64, 2, 2, 1, 32,
+                                      True, 0, 100, backend="interpret",
+                                      block_q=512, block_k=512)
+    assert clamped.block_q == 100 and clamped.block_k == 100
+
+
+def test_plan_is_deterministic_and_cached():
+    args = (768, 768, 64, 64, 2, 2, 1, 32, True, 48, 768)
+    assert autotune.plan_attention(*args) is autotune.plan_attention(*args)
+
+
+def test_flash_min_seq_floor_derives_from_min_block():
+    """With no block override the flash threshold floor is 2·min_block()
+    — the autotuner's smallest plannable stripe — not a stale tile
+    constant; an explicit attn_block_q raises the floor with it."""
+    import types
+    cfg = types.SimpleNamespace(attn_block_q=None, attn_flash_min_seq=8)
+    assert attention.flash_min_seq(cfg) == 2 * autotune.min_block()
+    cfg = types.SimpleNamespace(attn_block_q=64, attn_flash_min_seq=8)
+    assert attention.flash_min_seq(cfg) == 128
+    cfg = types.SimpleNamespace(attn_block_q=None, attn_flash_min_seq=2048)
+    assert attention.flash_min_seq(cfg) == 2048
+
+
+def test_plan_decode_block_divides_cache():
+    for seq in (256, 1024, 4096, 32768):
+        b = autotune.plan_decode(seq, 2, 64, 64, 32, backend="interpret")
+        assert seq % b == 0 and b >= autotune.MIN_BLOCK
+    # explicit block_s wins (clamped to the cache length)
+    assert autotune.plan_decode(1024, 2, 64, 64, 32, block_s=256) == 256
+    assert autotune.plan_decode(128, 2, 64, 64, 32, block_s=512) == 128
+
+
+def test_plan_copy_chunk_fits_budget():
+    for rows in (256, 4096, 131072, 1 << 20):
+        chunk = autotune.plan_copy_chunk(rows, 12 * 2 ** 20)
+        assert chunk >= autotune.MIN_BLOCK
+        assert 3 * chunk * autotune.LANES <= 12 * 2 ** 20 + 3 * autotune.LANES
+
+
+# --------------------- gradcheck parity at autotuned (None) block sizes
+
+def _mk(key, b, s, h, kh, hd):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kh, hd))
+    v = jax.random.normal(ks[2], (b, s, kh, hd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("s,h,kh,window", [
+    (100, 4, 2, 0),     # ragged + GQA
+    (65, 4, 2, 24),     # ragged + sliding window
+    (96, 3, 1, 0),      # MQA, odd head count
+    (384, 4, 2, 48),    # multi-tile + window
+])
+def test_autotuned_blocks_gradcheck_vs_twin(s, h, kh, window):
+    """block_q=block_k=None routes through the planner; values AND grads
+    must match the jnp twin at whatever layout it picked — including the
+    single-step megakernels the fixed-constant path never had."""
+    plan = autotune.plan_attention(s, s, 16, 16, h // kh, kh, 1, 32,
+                                   True, window, s, backend="interpret")
+    # the point of the test: the planner chose something other than the
+    # old fixed default layout
+    assert (plan.mega_fwd or plan.mega_bwd or plan.block_q != 128
+            or plan.g_fold > 1)
+
+    q, k, v = _mk(jax.random.PRNGKey(s + h + window), 1, s, h, kh, 16)
+
+    def loss_pallas(q_, k_, v_):
+        out = kops.flash_attention(q_, k_, v_, causal=True, window=window,
+                                   interpret=True)
+        return jnp.sum(jnp.sin(out))
+
+    def loss_twin(q_, k_, v_):
+        out = attention.flash_attention_jnp(
+            q_, k_, v_, jnp.zeros((), jnp.float32), True, window)
+        return jnp.sum(jnp.sin(out))
+
+    vp, gp = jax.value_and_grad(loss_pallas, argnums=(0, 1, 2))(q, k, v)
+    vt, gt = jax.value_and_grad(loss_twin, argnums=(0, 1, 2))(q, k, v)
+    np.testing.assert_allclose(float(vp), float(vt), atol=3e-4, rtol=1e-5)
+    for a, b_ in zip(gp, gt):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=3e-4, rtol=1e-4)
+
+
+# ------------------------------- MLA trains on the flash VJP (absorbed)
+
+def _mla_setup(seq=48, batch=2):
+    cfg = get_config("deepseek-v2-236b").reduced()
+    # drop the flash threshold so a smoke-sized sequence takes the
+    # absorbed-MQA Pallas path (floor becomes 2·min_block() = 32 < 48)
+    flash_cfg = dataclasses.replace(cfg, attn_flash_min_seq=16)
+    dense_cfg = dataclasses.replace(cfg, attn_flash_min_seq=1 << 20)
+    assert seq > attention.flash_min_seq(flash_cfg)
+    assert seq <= attention.flash_min_seq(dense_cfg)
+    params = attention.mla_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, seq, cfg.d_model))
+    positions = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+    return flash_cfg, dense_cfg, params, x, positions
+
+
+def test_mla_train_flash_path_runs_pallas_not_dense(monkeypatch):
+    """Above the threshold mla_train must go through the absorbed flash
+    kernel and never touch the dense reference."""
+    flash_cfg, dense_cfg, params, x, positions = _mla_setup()
+
+    def boom(*a, **kw):
+        raise AssertionError("dense full_attention reached on flash path")
+    monkeypatch.setattr(attention, "full_attention", boom)
+
+    out = attention.mla_train(params, x, flash_cfg, positions)
+    assert out.shape == x.shape
+    with pytest.raises(AssertionError, match="dense full_attention"):
+        attention.mla_train(params, x, dense_cfg, positions)
+
+
+def test_mla_flash_bwd_matches_dense():
+    """Loss AND grads (params and activations) of the absorbed-MQA flash
+    path match the dense full-attention reference — the W_UK/W_UV
+    absorption is exact up to f32 reassociation."""
+    flash_cfg, dense_cfg, params, x, positions = _mla_setup()
+
+    def loss(cfg):
+        def f(p, x_):
+            return jnp.sum(jnp.sin(
+                attention.mla_train(p, x_, cfg, positions)))
+        return f
+
+    vf, gf = jax.value_and_grad(loss(flash_cfg), argnums=(0, 1))(params, x)
+    vd, gd = jax.value_and_grad(loss(dense_cfg), argnums=(0, 1))(params, x)
+    np.testing.assert_allclose(float(vf), float(vd), atol=1e-3, rtol=1e-5)
+    flat_f, _ = jax.tree_util.tree_flatten_with_path(gf)
+    flat_d, _ = jax.tree_util.tree_flatten_with_path(gd)
+    for (path, a), (_, b) in zip(flat_f, flat_d):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-3, rtol=1e-3,
+            err_msg=f"grad mismatch at {jax.tree_util.keystr(path)}")
+
+
+def test_mla_prefill_flash_matches_dense_and_caches_latents():
+    flash_cfg, dense_cfg, params, x, positions = _mla_setup()
+    out_f, cache_f = attention.mla_prefill(params, x, flash_cfg, positions)
+    out_d, cache_d = attention.mla_prefill(params, x, dense_cfg, positions)
+    np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_d),
+                               atol=1e-4, rtol=1e-4)
+    assert set(cache_f) == set(cache_d) == {"c_kv", "k_rope"}
+    for k in cache_f:
+        np.testing.assert_allclose(np.asarray(cache_f[k]),
+                                   np.asarray(cache_d[k]),
+                                   atol=1e-5, rtol=1e-5)

@@ -206,6 +206,108 @@ def test_partition_copy_bytes_lane_aligned():
     assert np.array_equal(np.asarray(out), expect)
 
 
+# ------------------------------------------- HBM-staged DMA copy path
+# Buffers past DMA_STAGE_BYTES route through the double-buffered
+# make_async_copy kernel instead of the block-gather grid; same ranges
+# API, same arrival-order semantics, bit-exact.
+
+from repro.kernels import partition_copy as pc  # noqa: E402
+
+
+def _dma_buffers(extra_rows=4096, seed=0):
+    """dst/src just past the staging threshold (~16.5 MiB each)."""
+    rows = pc.DMA_STAGE_BYTES // pc.LANES + extra_rows
+    n = rows * pc.LANES
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, 255, n, dtype=np.uint8)
+    src = rng.integers(0, 255, n, dtype=np.uint8)
+    assert pc.dma_staged(n, n)
+    return dst, src, n
+
+
+def test_dma_staged_threshold_routing(monkeypatch):
+    """Exactly at the threshold stays on the batched grid path; one byte
+    past it stages through HBM DMA — proven by blowing up the path the
+    call must NOT take."""
+    thr = pc.DMA_STAGE_BYTES
+    assert not pc.dma_staged(thr, thr)
+    assert pc.dma_staged(thr + 1, 0)
+    assert pc.dma_staged(0, thr + 1)
+
+    def boom(*a, **kw):
+        raise AssertionError("wrong copy path")
+
+    # small buffers must not touch the DMA kernel
+    monkeypatch.setattr(pc, "_multi_partition_copy_dma", boom)
+    small = ops.multi_partition_copy_bytes(
+        jnp.zeros(4096, jnp.uint8), jnp.ones(4096, jnp.uint8),
+        ((0, 0, 512),), interpret=True)
+    assert np.asarray(small)[:512].sum() == 512
+    monkeypatch.undo()
+
+    # big buffers must not touch the batched grid kernel
+    dst, src, _ = _dma_buffers(seed=1)
+    monkeypatch.setattr(pc, "_multi_partition_copy_impl", boom)
+    out = ops.multi_partition_copy_bytes(
+        jnp.asarray(dst), jnp.asarray(src), ((0, 128, 128 * 64),),
+        interpret=True)
+    expect = dst.copy()
+    expect[:128 * 64] = src[128:128 + 128 * 64]
+    assert np.array_equal(np.asarray(out), expect)
+
+
+def test_multi_partition_copy_dma_bit_exact():
+    """>16 MiB buffers: the DMA-staged kernel is bit-exact vs the numpy
+    range assignment across ragged, non-chunk-aligned ranges spanning
+    the whole buffer."""
+    dst, src, n = _dma_buffers(seed=2)
+    L = pc.LANES
+    rows = n // L
+    ranges = (
+        (0, 512 * L, 3000 * L),                        # head of dst
+        (50_000 * L, 0, 7000 * L),                     # middle
+        ((rows - 5001) * L, 60_000 * L, 5000 * L),     # tail of dst
+        (40_000 * L, (rows - 129) * L, 128 * L),       # tail of src
+        (30_000 * L, 30_000 * L, 257 * L),             # odd row count
+    )
+    out = ops.multi_partition_copy_bytes(
+        jnp.asarray(dst), jnp.asarray(src), ranges, interpret=True)
+    expect = dst.copy()
+    for d_off, s_off, size in ranges:
+        expect[d_off:d_off + size] = src[s_off:s_off + size]
+    assert np.array_equal(np.asarray(out), expect)
+
+
+def test_multi_partition_copy_dma_hazard_ordering():
+    """DMA path keeps the batched path's hazard semantics: overlapping
+    sources are a gather from the ORIGINAL src, non-copied dst rows
+    survive the in-place read-modify-write (the double-buffered chunk
+    merge must not tear adjacent ranges), and overlapping destinations
+    are rejected up front."""
+    dst, src, n = _dma_buffers(seed=3)
+    L = pc.LANES
+    # two ranges gather the same source rows; two more land on adjacent
+    # dst rows so their chunks share RMW traffic with the gap between
+    ranges = (
+        (0, 1000 * L, 512 * L),
+        (1024 * L, 1000 * L, 512 * L),
+        (1536 * L, 256 * L, 512 * L),
+        (2049 * L, 256 * L, 511 * L),
+    )
+    out = ops.multi_partition_copy_bytes(
+        jnp.asarray(dst), jnp.asarray(src), ranges, interpret=True)
+    expect = dst.copy()
+    for d_off, s_off, size in ranges:
+        expect[d_off:d_off + size] = src[s_off:s_off + size]
+    assert np.array_equal(np.asarray(out), expect)
+
+    with pytest.raises(ValueError, match="overlap"):
+        ops.multi_partition_copy_bytes(
+            jnp.asarray(dst), jnp.asarray(src),
+            ((0, 0, 512 * L), (256 * L, 2048 * L, 512 * L)),
+            interpret=True)
+
+
 def test_flash_mla_dims():
     """qk head_dim ≠ v head_dim (deepseek MLA layout)."""
     q, k, v = _mk_qkv(jax.random.PRNGKey(9), 2, 128, 4, 4, 48, hd_v=32)
