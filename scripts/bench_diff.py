@@ -39,16 +39,28 @@ def compare(old: dict, new: dict, name: str,
             continue
         if ov <= 0 or nv <= 0:
             continue
+        # throughput keys are HIGHER-is-better: a regression is the ratio
+        # *dropping*, not rising (check before the generic *_s suffix —
+        # tok_per_s ends with _s too)
+        higher_better = key.endswith("_per_s") or "_per_s_" in key
         if hard:
             threshold = HARD_THRESHOLD
-        elif key.startswith("makespan"):
-            threshold = MAKESPAN_THRESHOLD
+        elif higher_better:
+            threshold = MAKESPAN_THRESHOLD   # virtual time: deterministic
+        elif key.startswith(("makespan", "p50_", "p99_")):
+            threshold = MAKESPAN_THRESHOLD   # latency percentiles likewise
         elif key.endswith("_ms") or key.endswith("_s"):
             threshold = WALL_THRESHOLD
         else:
             continue               # counters: tracked, not thresholded
         ratio = nv / ov
-        if ratio > 1.0 + threshold:
+        if higher_better:
+            if ratio < 1.0 - threshold:
+                warnings.append(
+                    f"{name}:{key} regressed {ratio:.2f}x (throughput "
+                    f"{ov:.6g} -> {nv:.6g}, threshold -{threshold:.0%}"
+                    f"{', HARD' if hard else ''})")
+        elif ratio > 1.0 + threshold:
             warnings.append(
                 f"{name}:{key} regressed {ratio:.2f}x "
                 f"({ov:.6g} -> {nv:.6g}, threshold +{threshold:.0%}"

@@ -306,6 +306,10 @@ class DbObj:
     spilling: bool = False                         # spill write-back in flight
     spilled: bool = False                          # buffer lives in the spill file
     spill_offset: int = -1                         # offset in the node's spill file
+    # virtual time of the last grant touching this block: the spill policy
+    # evicts least-recently-granted first (a hot old block — e.g. a serve
+    # session's archive — outlives colder younger ones)
+    last_touch: float = 0.0
     # bumped whenever the buffer can change (RW/EW grant, copy into this
     # block): a spill completion whose snapshot predates the current
     # version aborts instead of dropping fresher bytes

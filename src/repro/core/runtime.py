@@ -137,6 +137,9 @@ class Stats:
     table_shards: int = 0
     table_hot_shards: int = 0
     spilled_objects: int = 0
+    # spill-file slots handed back out of the free list instead of growing
+    # the file (slot reuse — see Runtime._spill_shard)
+    spill_slots_reused: int = 0
     makespan: float = 0.0
 
     def snapshot(self) -> Dict[str, float]:
@@ -154,7 +157,10 @@ class _Node:
     lid_table: Dict[Lid, Optional[Guid]] = dataclasses.field(default_factory=dict)
     # --- cold-object spill (one private spill file per node) ---
     spill_path: Optional[str] = None
-    spill_tail: int = 0               # bump allocator over the spill file
+    spill_tail: int = 0               # high-water mark of the spill file
+    # freed spill-file holes as (offset, size), first-fit reused by the
+    # next spill instead of bumping the tail forever
+    spill_free: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     spilled: int = 0                  # blocks currently spilled on this node
     spill_inflight: int = 0           # victims with a spill write in flight
     spill_scan_at: float = -1.0       # last fruitless-scan timestamp guard
@@ -437,6 +443,8 @@ class Runtime:
         node.spilled = 0
         node.spill_inflight = 0
         node.resident_dbs = 0
+        node.spill_tail = 0
+        node.spill_free.clear()
         if node.spill_path is not None:
             try:
                 os.unlink(node.spill_path)
@@ -571,6 +579,18 @@ class Runtime:
 
     def _on_MDep(self, msg: MDep) -> None:
         src = self.resolve(msg.source)
+        if isinstance(src, Lid):
+            # §3: a cross-node dependence can reach dispatch before the
+            # LID's binding message lands — sender-side deferral only
+            # covers the *sender's* unresolved LIDs.  Park the dep at the
+            # LID's home node; the binding patch retransmits it.
+            home = self.nodes[src.node]
+            if src in home.lid_table:
+                self.stats.messages_deferred += 1
+                msg._blocked_on = {src}            # type: ignore[attr-defined]
+                msg._deliver_at = self.clock       # type: ignore[attr-defined]
+                home.deferred.setdefault(src, []).append(msg)
+                return
         if is_null(src):
             dest = self.resolve(msg.dest)
             self.send(MSatisfy(target=dest, slot=msg.slot, db=NULL_GUID, ),
@@ -711,6 +731,7 @@ class Runtime:
                 self._enqueue_waiter(edt, db.guid)
                 return db.guid
         for db, mode in deps:
+            db.last_touch = self.clock      # access recency for the spill policy
             if mode in (DbMode.RO, DbMode.CONST):
                 db.readers += 1
             elif mode in (DbMode.RW, DbMode.EW):
@@ -879,12 +900,16 @@ class Runtime:
         return db.buffer
 
     def _clear_spill(self, db: DbObj) -> None:
-        """Drop ``db``'s spilled status (re-materialized or destroyed)."""
+        """Drop ``db``'s spilled status (re-materialized or destroyed) and
+        return its spill-file slot to the node's free list."""
         db.spilled = False
         node = self.nodes[db.guid.node]
         node.spilled = max(0, node.spilled - 1)
         node.objects.note_unspilled(db.guid)
         self.stats.spilled_objects -= 1
+        if db.spill_offset >= 0:
+            self._spill_release(node, db.spill_offset, db.size)
+            db.spill_offset = -1
 
     def _execute(self, edt: EdtObj) -> None:
         edt.state = "running"
@@ -990,15 +1015,24 @@ class Runtime:
 
     # -- cold-object spill ---------------------------------------------------
 
+    def spill_check(self, node_idx: int) -> None:
+        """Public eviction hook: re-run the spill policy on ``node_idx`` now.
+
+        The serve engine calls this after demoting a session's pages into
+        its archive block — the archive is brand-new resident memory the
+        task-retirement trigger hasn't seen yet."""
+        self.nodes[node_idx].spill_scan_at = -1.0
+        self._maybe_spill(node_idx)
+
     def _maybe_spill(self, node_idx: int) -> None:
         """Spill cold data blocks if ``node_idx`` is over ``spill_threshold``.
 
         Policy: when a node holds more buffer-resident data blocks than the
         threshold, idle unlocked ones (no lock holders, no waiters, no live
         partitions, not a §6 view, no IO in flight) are written back to the
-        node's private spill file — one IO-queue op per shard, scanning
-        shards from the cold (oldest seq-range) end — until the resident
-        count is back under the threshold or no candidates remain.  The
+        node's private spill file, least-recently-granted first, until the
+        resident count is back under the threshold or no candidates remain.
+        Contiguously-placed victims share one IO-queue write op.  The
         buffer is dropped only when the spill op *completes*, so a halted
         ``run(until)`` or a fail-stop loses exactly the in-flight spill
         ops, never object payloads (PR 3's IO crash contract).
@@ -1022,19 +1056,18 @@ class Runtime:
             # nothing was released since (releases clear the guard) —
             # skip the O(objects) victim walk
             return
-        spilled_any = False
+        # access-recency policy: least-recently-granted first (ties broken
+        # by creation order, the old oldest-seq policy).  A hot old block —
+        # a long-lived serve session's pages — now outlives colder younger
+        # ones instead of being evicted for merely being old.
+        cands = []
         for _idx, shard in node.objects.shards(ObjectKind.DATABLOCK):
-            victims = [o for o in shard.objs.values() if self._spillable(o)]
-            if not victims:
-                continue
-            victims = victims[:need]       # never spill below the threshold
-            self._spill_shard(node, victims)
-            spilled_any = True
-            need -= len(victims)
-            if need <= 0:
-                return
-        if not spilled_any:
+            cands.extend(o for o in shard.objs.values() if self._spillable(o))
+        if not cands:
             node.spill_scan_at = self.clock
+            return
+        cands.sort(key=lambda d: (d.last_touch, d.guid.seq))
+        self._spill_shard(node, cands[:need])   # never spill below threshold
 
     def _spillable(self, db: Any) -> bool:
         return (isinstance(db, DbObj) and db.buffer is not None
@@ -1044,27 +1077,69 @@ class Runtime:
                 and getattr(db, "ready", True)
                 and not self._db_waiters.get(db.guid))
 
+    def _spill_alloc(self, node: _Node, size: int) -> int:
+        """Place ``size`` spill bytes: first-fit from the free list of
+        holes left by re-materialized/destroyed victims, else bump the
+        tail.  Reuse counts in ``Stats.spill_slots_reused``."""
+        for i, (off, sz) in enumerate(node.spill_free):
+            if sz >= size:
+                if sz == size:
+                    node.spill_free.pop(i)
+                else:
+                    node.spill_free[i] = (off + size, sz - size)
+                self.stats.spill_slots_reused += 1
+                return off
+        off = node.spill_tail
+        node.spill_tail += size
+        return off
+
+    def _spill_release(self, node: _Node, off: int, size: int) -> None:
+        """Return a spill-file range to the free list, coalescing adjacent
+        holes; a hole ending at the tail shrinks the high-water mark."""
+        if off < 0 or size <= 0:
+            return
+        holes = sorted(node.spill_free + [(off, size)])
+        merged: List[Tuple[int, int]] = []
+        for o, s in holes:
+            if merged and merged[-1][0] + merged[-1][1] == o:
+                merged[-1] = (merged[-1][0], merged[-1][1] + s)
+            else:
+                merged.append((o, s))
+        if merged and merged[-1][0] + merged[-1][1] == node.spill_tail:
+            node.spill_tail = merged.pop()[0]
+        node.spill_free = merged
+
     def _spill_shard(self, node: _Node, victims: List[DbObj]) -> None:
-        """Serialize one shard's cold blocks into the node's spill file
-        through the §5 IO queue (one write-back op for the whole shard)."""
+        """Serialize cold blocks into the node's spill file through the §5
+        IO queue.  Offsets come from the free list first (slot reuse),
+        then the tail; victims placed contiguously share one disk op."""
         if node.spill_path is None:
             fd, path = tempfile.mkstemp(prefix=f"ocr-spill-n{node.idx}-",
                                         suffix=".bin")
             os.close(fd)
             node.spill_path = path
-        chunks: List[bytes] = []
-        meta: List[Tuple[Guid, int, int, int]] = []
-        off = node.spill_tail
+        placed: List[Tuple[DbObj, int, bytes]] = []
         for db in victims:
             data = db.buffer.tobytes()
-            chunks.append(data)
-            meta.append((db.guid, off, len(data), db.version))
-            off += len(data)
+            placed.append((db, self._spill_alloc(node, len(data)), data))
             db.spilling = True
-        node.spill_tail = off
         node.spill_inflight += len(victims)
-        self.io.submit_spill(node.idx, node.spill_path, meta[0][1],
-                             b"".join(chunks), meta)
+        placed.sort(key=lambda t: t[1])
+
+        def _flush(run: List[Tuple[DbObj, int, bytes]]) -> None:
+            meta = [(db.guid, off, len(data), db.version)
+                    for db, off, data in run]
+            self.io.submit_spill(node.idx, node.spill_path, run[0][1],
+                                 b"".join(d for _, _, d in run), meta)
+
+        run: List[Tuple[DbObj, int, bytes]] = []
+        for entry in placed:
+            if run and run[-1][1] + len(run[-1][2]) != entry[1]:
+                _flush(run)
+                run = []
+            run.append(entry)
+        if run:
+            _flush(run)
         self._log("SPILL", len(victims), "blocks ->", node.spill_path)
 
     def _finish_spill(self, op: Any) -> None:
@@ -1080,12 +1155,16 @@ class Runtime:
             node.spill_inflight = max(0, node.spill_inflight - 1)
             db = self.try_lookup(gid)
             if db is None or not isinstance(db, DbObj) or not db.spilling:
+                if node.alive:      # reclaim the slot reserved at submit
+                    self._spill_release(node, off, _size)
                 continue
             db.spilling = False
             if (db.version != version or db.locked() or db.partitions
                     or db.buffer is None or db.pending_destroy
                     or self._db_waiters.get(gid)):
-                continue           # hot again: keep the live buffer
+                # hot again: keep the live buffer, free the reserved slot
+                self._spill_release(node, off, _size)
+                continue
             db.buffer = None
             db.spilled = True
             db.spill_offset = off
@@ -1641,18 +1720,28 @@ class TaskCtx:
     # -- data blocks ------------------------------------------------------------
 
     def db_create(self, size: int, props: int = 0,
-                  placement: Optional[int] = None) -> Tuple[Any, Optional[np.ndarray]]:
+                  placement: Optional[int] = None,
+                  mapped_id: Optional[Lid] = None) -> Tuple[Any, Optional[np.ndarray]]:
         """``ocrDbCreate``.  Returns ``(id, ptr)``.
 
         Local by default.  With a remote ``placement`` the block is created
         on the target node through the §3 ``MCreate`` path and ``ptr`` is
         None (remote memory is only reachable through an acquire):
         ``EDT_PROP_LID`` returns a LID immediately, otherwise the call
-        blocks one round-trip for the GUID.
+        blocks one round-trip for the GUID.  ``EDT_PROP_MAPPED`` binds the
+        map-provided ``mapped_id`` (§4) — a labeled-map creator can hand
+        out data blocks (e.g. serve-engine request slots), not just EDTs.
         """
         payload = dict(size=size, props=props)
         target = self.node if placement is None \
             else self.rt._pick_node(placement)
+        if props & EDT_PROP_MAPPED:
+            lid = mapped_id if mapped_id is not None else self._mapped_lid
+            if lid is None:
+                raise OcrError("EDT_PROP_MAPPED requires the map-provided LID")
+            db = self.rt._create_db(target, payload)
+            self.rt._apply_lid_binding(lid, db.guid)
+            return lid, db.buffer if target == self.node else None
         if target == self.node:
             db = self.rt._create_db(self.node, payload)
             return db.guid, db.buffer

@@ -219,6 +219,66 @@ def decode_update_and_attend(q: jax.Array, k_new: jax.Array,
     return out, k_cache, v_cache
 
 
+# ------------------------------------------------------------- paged decode
+
+def paged_update_and_attend(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                            k_pages: jax.Array, v_pages: jax.Array,
+                            page_table: jax.Array, cur_lens: jax.Array,
+                            active: jax.Array, *, window: int = 0):
+    """Per-request paged decode over §6 pages of a shared cache pool.
+
+    q, k_new, v_new: (B, 1, H|KH, hd); pools (P, KH, page, hd) — every
+    request's KV lives in fixed-size pages of one pool, indexed through
+    ``page_table`` (B, max_pages) int32 (entries past a row's page count
+    are ignored).  ``cur_lens`` (B,) int32 tokens already cached per row;
+    ``active`` (B,) bool — inactive rows write nothing and output zeros.
+
+    The attention is the lse-combine math of the cache-stripe decode path
+    applied per page: each page contributes a partial max/sum, merged
+    through a global max — numerically identical to one masked softmax
+    over the row's gathered pages.  Returns (out (B,1,H,hd_v), k_pages',
+    v_pages').
+    """
+    b, _, h, hd = q.shape
+    npages, kh, page, _ = k_pages.shape
+    g = h // kh
+    max_pages = page_table.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    cur = jnp.asarray(cur_lens, jnp.int32)
+    rows = jnp.arange(b)
+
+    # scatter the new token: row i writes page_table[i, cur//page] slot
+    # cur%page; inactive rows aim past the pool and drop
+    phys = page_table[rows, cur // page]
+    phys = jnp.where(active, phys, npages)
+    slot = cur % page
+    kn = k_new[:, 0].astype(k_pages.dtype)          # (B, KH, hd)
+    vn = v_new[:, 0].astype(v_pages.dtype)
+    k_pages = k_pages.at[phys, :, slot].set(kn, mode="drop")
+    v_pages = v_pages.at[phys, :, slot].set(vn, mode="drop")
+
+    # gather each row's page list and lse-combine across pages
+    kg = k_pages[page_table].astype(jnp.float32)    # (B, mp, KH, page, hd)
+    vg = v_pages[page_table].astype(jnp.float32)
+    qg = q[:, 0].reshape(b, kh, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bpksh->bkgps", qg, kg) * scale
+    pos = (jnp.arange(max_pages)[:, None] * page
+           + jnp.arange(page)[None, :])             # (mp, page)
+    valid = pos[None] < (cur + 1)[:, None, None]
+    if window > 0:
+        valid &= pos[None] >= jnp.maximum(cur + 1 - window, 0)[:, None, None]
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    m_loc = jnp.max(s, axis=-1)                     # (B, KH, g, mp)
+    m_all = jnp.max(m_loc, axis=-1)                 # (B, KH, g)
+    p = jnp.exp(s - m_all[..., None, None])
+    p = jnp.where(valid[:, None, None], p, 0.0)
+    num = jnp.einsum("bkgps,bpksh->bkgh", p, vg)
+    den = jnp.sum(p, axis=(-2, -1))
+    out = num / jnp.maximum(den, 1e-37)[..., None]
+    out = out * active[:, None, None, None]
+    return (out.reshape(b, 1, h, -1).astype(q.dtype), k_pages, v_pages)
+
+
 # ---------------------------------------------------------------- MLA decode
 
 def mla_decode_attend(q_latent: jax.Array, q_rope: jax.Array,

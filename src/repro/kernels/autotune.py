@@ -198,6 +198,12 @@ class AttnPlan:
     # the single-tile footprint fits the budget.
     mega_fwd: bool = False
     mega_bwd: bool = False
+    # batch-tiled mega: grid over B only, one batch row per step.  The
+    # softmax transient shrinks by 1/B, so serving-size batches keep the
+    # flat elementwise chain when the full-batch transient blows
+    # MEGA_BUDGET; each extra grid step costs one STEP_COST.
+    mega_fwd_bt: bool = False
+    mega_bwd_bt: bool = False
 
     @property
     def padded_q(self):
@@ -210,7 +216,9 @@ class AttnPlan:
             f"dq{self.dq_block_q}x{self.dq_block_k}/" \
             f"dkv{self.dkv_block_q}x{self.dkv_block_k}"
         mega = "".join([" mega_fwd" if self.mega_fwd else "",
-                        " mega_bwd" if self.mega_bwd else ""])
+                        " mega_bwd" if self.mega_bwd else "",
+                        " mega_fwd_bt" if self.mega_fwd_bt else "",
+                        " mega_bwd_bt" if self.mega_bwd_bt else ""])
         return (f"bq{self.block_q} bk{self.block_k} gf{self.g_fold} "
                 f"bwd={fb} vmem={self.vmem_bytes // 1024}KiB{mega}")
 
@@ -420,6 +428,7 @@ def plan_attention(sq: int, sk: int, hd: int, hd_v: int, g: int, kh: int,
     # is computed.  Gated on the materialized softmax-matrix transients
     # (host RAM in interpret mode, real VMEM on TPU).
     mega_fwd = mega_bwd = False
+    mega_fwd_bt = mega_bwd_bt = False
     vm_mf = vm_mb = 0
     if not pinned:
         mega_budget = MEGA_BUDGET.get(backend) or budget
@@ -431,6 +440,18 @@ def plan_attention(sq: int, sk: int, hd: int, hd_v: int, g: int, kh: int,
         mega_fwd = vm_mf <= mega_budget and c_mf < best[0][0]
         bwd_cost = best_fused[0][0] if use_fused else two_call_cost
         mega_bwd = vm_mb <= mega_budget and c_mb < bwd_cost
+        # batch-tiled fallback: when the full-batch transient is what
+        # killed the mega (serving batch sizes), grid over B alone — the
+        # per-step transient is 1/B of the full one and the flat
+        # elementwise chain survives, at B·STEP_COST extra
+        if batch > 1:
+            c_mf_bt = full * (hd_work + elem_flat) + batch * step_cost
+            c_mb_bt = full * (hd_work * 2.5 + 2 * elem_flat) \
+                + batch * step_cost
+            mega_fwd_bt = (not mega_fwd and vm_mf // batch <= mega_budget
+                           and c_mf_bt < best[0][0])
+            mega_bwd_bt = (not mega_bwd and vm_mb // batch <= mega_budget
+                           and c_mb_bt < bwd_cost)
 
     if use_fused:
         _, fbq, fbk, vm_f = best_fused
@@ -439,8 +460,11 @@ def plan_attention(sq: int, sk: int, hd: int, hd_v: int, g: int, kh: int,
                         dkv_block_q=fbq, dkv_block_k=fbk,
                         vmem_bytes=max(vm_fwd, vm_f,
                                        vm_mf if mega_fwd else 0,
-                                       vm_mb if mega_bwd else 0),
-                        mega_fwd=mega_fwd, mega_bwd=mega_bwd)
+                                       vm_mb if mega_bwd else 0,
+                                       vm_mf // batch if mega_fwd_bt else 0,
+                                       vm_mb // batch if mega_bwd_bt else 0),
+                        mega_fwd=mega_fwd, mega_bwd=mega_bwd,
+                        mega_fwd_bt=mega_fwd_bt, mega_bwd_bt=mega_bwd_bt)
     else:
         _, dqq, dqk, dqgf, vm_dq = best_dq
         _, dkq, dkk, dkgf, vm_dkv = best_dkv
@@ -450,8 +474,11 @@ def plan_attention(sq: int, sk: int, hd: int, hd_v: int, g: int, kh: int,
                         dkv_block_q=dkq, dkv_block_k=dkk,
                         vmem_bytes=max(vm_fwd, vm_dq, vm_dkv,
                                        vm_mf if mega_fwd else 0,
-                                       vm_mb if mega_bwd else 0),
-                        mega_fwd=mega_fwd, mega_bwd=mega_bwd)
+                                       vm_mb if mega_bwd else 0,
+                                       vm_mf // batch if mega_fwd_bt else 0,
+                                       vm_mb // batch if mega_bwd_bt else 0),
+                        mega_fwd=mega_fwd, mega_bwd=mega_bwd,
+                        mega_fwd_bt=mega_fwd_bt, mega_bwd_bt=mega_bwd_bt)
     return plan
 
 

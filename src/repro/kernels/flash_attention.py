@@ -269,30 +269,42 @@ def _whole(shape):
     return pl.BlockSpec(shape, lambda i, off, _n=n: (0,) * _n)
 
 
+def _bt(shape):
+    """Batch-tiled spec: one batch row per grid step, everything else
+    whole.  The mega kernel bodies read ``b`` from the ref shape, so the
+    same bodies run unchanged with b=1 blocks."""
+    n = len(shape)
+    return pl.BlockSpec((1,) + tuple(shape[1:]),
+                        lambda i, off, _n=n: (i,) + (0,) * (_n - 1))
+
+
 def _fwd_mega_call(q, k, v, offs, *, causal: bool, window: int,
-                   kv_len: int, interpret: bool, with_lse: bool):
+                   kv_len: int, interpret: bool, with_lse: bool,
+                   batch_tiled: bool = False):
     b, kh, g, sq, hd = q.shape
     sk = k.shape[2]
     hd_v = v.shape[-1]
+    spec = _bt if batch_tiled else _whole
     kernel = functools.partial(
         _fwd_mega_kernel, g=g, causal=causal, window=window,
         scale=1.0 / np.sqrt(hd), kv_len=kv_len, with_lse=with_lse)
     out_shape = [jax.ShapeDtypeStruct((b, kh, g, sq, hd_v), q.dtype)]
-    out_specs = [_whole((b, kh, g, sq, hd_v))]
+    out_specs = [spec((b, kh, g, sq, hd_v))]
     if with_lse:
         out_shape.append(jax.ShapeDtypeStruct((b, kh, g, sq), jnp.float32))
-        out_specs.append(_whole((b, kh, g, sq)))
+        out_specs.append(spec((b, kh, g, sq)))
     res = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(1,),
-            in_specs=[_whole(q.shape), _whole(k.shape), _whole(v.shape)],
+            grid=(b,) if batch_tiled else (1,),
+            in_specs=[spec(q.shape), spec(k.shape), spec(v.shape)],
             out_specs=out_specs,
         ),
         out_shape=out_shape,
         compiler_params=_COMPILER_PARAMS(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=(
+                ("parallel",) if batch_tiled else ("arbitrary",))),
         interpret=interpret,
     )(offs, q, k, v)
     return (res[0], res[1]) if with_lse else (res[0], None)
@@ -327,10 +339,12 @@ def _bwd_mega_kernel(off_ref, q_ref, k_ref, v_ref, do_ref, lse_ref,
 
 
 def _bwd_mega_call(q, k, v, do, lse, delta, offs, *, causal: bool,
-                   window: int, kv_len: int, interpret: bool):
+                   window: int, kv_len: int, interpret: bool,
+                   batch_tiled: bool = False):
     b, kh, g, sq, hd = q.shape
     sk = k.shape[2]
     hd_v = v.shape[-1]
+    spec = _bt if batch_tiled else _whole
     kernel = functools.partial(
         _bwd_mega_kernel, g=g, causal=causal, window=window,
         scale=1.0 / np.sqrt(hd), kv_len=kv_len)
@@ -338,13 +352,13 @@ def _bwd_mega_call(q, k, v, do, lse, delta, offs, *, causal: bool,
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(1,),
-            in_specs=[_whole(q.shape), _whole(k.shape), _whole(v.shape),
-                      _whole(do.shape), _whole(lse.shape),
-                      _whole(delta.shape)],
-            out_specs=[_whole((b, kh, g, sq, hd)),
-                       _whole((b, kh, sk, hd)),
-                       _whole((b, kh, sk, hd_v))],
+            grid=(b,) if batch_tiled else (1,),
+            in_specs=[spec(q.shape), spec(k.shape), spec(v.shape),
+                      spec(do.shape), spec(lse.shape),
+                      spec(delta.shape)],
+            out_specs=[spec((b, kh, g, sq, hd)),
+                       spec((b, kh, sk, hd)),
+                       spec((b, kh, sk, hd_v))],
         ),
         out_shape=[
             jax.ShapeDtypeStruct((b, kh, g, sq, hd), q.dtype),
@@ -352,17 +366,19 @@ def _bwd_mega_call(q, k, v, do, lse, delta, offs, *, causal: bool,
             jax.ShapeDtypeStruct((b, kh, sk, hd_v), v.dtype),
         ],
         compiler_params=_COMPILER_PARAMS(
-            dimension_semantics=("arbitrary",)),
+            dimension_semantics=(
+                ("parallel",) if batch_tiled else ("arbitrary",))),
         interpret=interpret,
     )(offs, q, k, v, do, lse, delta)
 
 
 def _fwd_call(q, k, v, offs, *, causal: bool, window: int, plan: AttnPlan,
               kv_len: int, interpret: bool, with_lse: bool):
-    if plan.mega_fwd:
+    if plan.mega_fwd or plan.mega_fwd_bt:
         return _fwd_mega_call(q, k, v, offs, causal=causal, window=window,
                               kv_len=kv_len, interpret=interpret,
-                              with_lse=with_lse)
+                              with_lse=with_lse,
+                              batch_tiled=plan.mega_fwd_bt)
     block_q, block_k, g_fold = plan.block_q, plan.block_k, plan.g_fold
     b, kh, g, sq, hd = q.shape
     sk = k.shape[2]
@@ -610,10 +626,11 @@ def _bwd_call(q, k, v, do, lse, delta, offs, plan: AttnPlan, *,
     hd_v = v.shape[-1]
     scale = 1.0 / np.sqrt(hd)
 
-    if plan.mega_bwd:
+    if plan.mega_bwd or plan.mega_bwd_bt:
         return _bwd_mega_call(q, k, v, do, lse, delta, offs, causal=causal,
                               window=window, kv_len=kv_len,
-                              interpret=interpret)
+                              interpret=interpret,
+                              batch_tiled=plan.mega_bwd_bt)
 
     if plan.fused_bwd:
         bq, bk = plan.dq_block_q, plan.dq_block_k

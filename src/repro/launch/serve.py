@@ -1,101 +1,116 @@
-"""Batched serving driver: prefill a batch of prompts, decode N tokens.
+"""Continuous-batching serve driver on the paged-KV engine.
+
+Admits an open-loop Poisson arrival stream into `repro.serve.engine`:
+request slots come from a labeled-GUID array, the KV cache is pages of
+one shared §6-partitioned block, and cold sessions spill to disk through
+the IO queue when ``--resident-budget`` is set.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-      --batch 4 --prompt-len 32 --gen 16 [--ckpt-dir /tmp/ckpt]
+      --requests 16 --rate 200 [--ckpt-dir /tmp/ckpt] [--static]
+
+Positions are carried as traced (B,) arrays inside the jitted decode
+step — the engine never round-trips decode state through Python ints, so
+nothing retraces as requests join and leave the batch.
 """
 import argparse
 import dataclasses
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro import ckpt
 from repro.configs import get_config
-from repro.models.model import LanguageModel
+from repro.serve.engine import (ModelBackend, ServeEngine, StepCost,
+                                SyntheticBackend, poisson_workload,
+                                run_static)
+
+
+def _fmt(m: dict) -> str:
+    return (f"{m['tokens']:.0f} toks in {m['makespan_s'] * 1e3:.1f}ms virtual "
+            f"-> {m['tok_per_s']:.0f} tok/s, "
+            f"p50 {m['p50_latency_s'] * 1e3:.2f}ms "
+            f"p99 {m['p99_latency_s'] * 1e3:.2f}ms")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (tiny dims, fp32)")
+    ap.add_argument("--synthetic", action="store_true",
+                    help="skip the model; deterministic token function")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=200.0,
+                    help="Poisson arrival rate, requests per virtual second")
+    ap.add_argument("--prompt-len", type=int, nargs=2, default=(8, 24),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--gen", type=int, nargs=2, default=(4, 12),
+                    metavar=("LO", "HI"))
+    ap.add_argument("--b-cap", type=int, default=8,
+                    help="request slots / decode batch rows")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="tokens per KV page")
+    ap.add_argument("--pool-pages", type=int, default=64)
+    ap.add_argument("--max-pages", type=int, default=8,
+                    help="page-table width (max pages per request)")
+    ap.add_argument("--resident-budget", type=int, default=0,
+                    help="data blocks resident per node before session "
+                         "archives spill to disk (0 = unlimited)")
+    ap.add_argument("--static", action="store_true",
+                    help="also run the static-batch baseline")
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg = get_config(args.arch)
-    if args.smoke:
-        cfg = cfg.reduced()
-    cfg = dataclasses.replace(cfg, param_dtype=cfg.dtype)  # serving weights
-    model = LanguageModel(cfg)
+    reqs = poisson_workload(args.requests, args.rate,
+                            prompt_len=tuple(args.prompt_len),
+                            gen=tuple(args.gen), seed=args.seed)
 
-    if args.ckpt_dir:
-        tree, step = ckpt.restore(args.ckpt_dir)
-        params = jax.tree_util.tree_map(jnp.asarray, tree)["params"]
-        # restored fp32 masters → serving dtype
-        from repro.models.layers import cast_params
-        params = cast_params(params, cfg.dtype)
-        print(f"restored step {step}")
+    if args.synthetic:
+        backend = SyntheticBackend(args.page_size)
     else:
-        params = model.init(jax.random.PRNGKey(0))
-
-    key = jax.random.PRNGKey(42)
-    b, p = args.batch, args.prompt_len
-    batch = {"tokens": jax.random.randint(key, (b, p), 0, cfg.vocab_size)}
-    if cfg.family == "vlm":
-        batch["patches"] = jax.random.normal(
-            key, (b, cfg.num_patches, cfg.d_model)) * 0.02
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            key, (b, cfg.encoder_seq, cfg.d_model)) * 0.02
-
-    prefill = jax.jit(model.prefill)
-    decode = jax.jit(model.decode_step, donate_argnums=(1,))
-
-    t0 = time.perf_counter()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-
-    # grow the cache seq axes for generation (attention caches only)
-    def grow(path, leaf):
-        name = path[-1].key if hasattr(path[-1], "key") else ""
-        axis = {"k": -2, "v": -2, "c_kv": -2, "k_rope": -2}.get(name)
-        if axis is None:
-            return leaf
-        pad = [(0, 0)] * leaf.ndim
-        pad[axis] = (0, args.gen)
-        return jnp.pad(leaf, pad)
-    cache = jax.tree_util.tree_map_with_path(grow, cache)
-
-    prefix = cfg.num_patches if cfg.family == "vlm" else 0
-    cur = prefix + p
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out_tokens = [np.asarray(tok)[:, 0]]
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, cache, tok,
-                               jnp.asarray(cur + i, jnp.int32))
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature)[:, None].astype(jnp.int32)
+        import jax
+        import jax.numpy as jnp
+        from repro.models.model import LanguageModel
+        cfg = get_config(args.arch)
+        if args.smoke:
+            cfg = cfg.reduced()
+        cfg = dataclasses.replace(cfg, param_dtype=cfg.dtype)
+        model = LanguageModel(cfg)
+        if args.ckpt_dir:
+            from repro import ckpt
+            from repro.models.layers import cast_params
+            tree, step = ckpt.restore(args.ckpt_dir)
+            params = jax.tree_util.tree_map(jnp.asarray, tree)["params"]
+            params = cast_params(params, cfg.dtype)
+            print(f"restored step {step}")
         else:
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out_tokens.append(np.asarray(tok)[:, 0])
-    jax.block_until_ready(tok)
-    t_gen = time.perf_counter() - t0
+            params = model.init(jax.random.PRNGKey(0))
+        pad = args.page_size
+        prompt_pad = ((args.prompt_len[1] + pad - 1) // pad) * pad
+        backend = ModelBackend(model, params, pool_pages=args.pool_pages,
+                               page_size=args.page_size,
+                               prompt_pad=prompt_pad)
+        vocab = cfg.vocab_size
+        for r in reqs:
+            r.prompt = np.minimum(r.prompt, vocab - 1)
 
-    gen = np.stack(out_tokens, axis=1)
-    print(f"arch={cfg.name} prefill({p} toks x{b}): {t_prefill*1e3:.0f}ms; "
-          f"decode {args.gen - 1} steps: {t_gen*1e3:.0f}ms "
-          f"({(args.gen - 1) * b / max(t_gen, 1e-9):.1f} tok/s)")
-    for i in range(min(b, 2)):
-        print(f"  seq{i}: {gen[i].tolist()}")
+    eng = ServeEngine(backend, b_cap=args.b_cap,
+                      pool_pages=args.pool_pages, max_pages=args.max_pages,
+                      resident_budget=args.resident_budget or None)
+    t0 = time.perf_counter()
+    m = eng.run(reqs)
+    wall = time.perf_counter() - t0
+    print(f"continuous: {_fmt(m)}  "
+          f"[evictions {m['evictions']:.0f}, resumes {m['resumes']:.0f}, "
+          f"spilled {m['spilled_objects']:.0f}; wall {wall:.2f}s]")
+    for r in reqs[: min(2, len(reqs))]:
+        print(f"  req{r.rid}: {r.out}")
+
+    if args.static:
+        s = run_static(reqs, b_cap=args.b_cap)
+        print(f"static:     {_fmt(s)}")
+        print(f"speedup: {m['tok_per_s'] / s['tok_per_s']:.2f}x tok/s, "
+              f"{s['p99_latency_s'] / max(m['p99_latency_s'], 1e-12):.2f}x p99")
 
 
 if __name__ == "__main__":

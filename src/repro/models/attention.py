@@ -345,11 +345,18 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_cache).astype(jnp.float32)
     scores *= 1.0 / np.sqrt(hd)
     pos = jnp.arange(smax)
-    cur = jnp.asarray(cur_len)                      # scalar
-    valid = pos < cur
-    if window > 0:
-        valid &= pos >= jnp.maximum(cur - window, 0)
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    cur = jnp.asarray(cur_len)
+    if cur.ndim == 0:
+        valid = pos < cur                           # (smax,), shared
+        if window > 0:
+            valid &= pos >= jnp.maximum(cur - window, 0)
+        mask = valid[None, None, None, None, :]
+    else:
+        valid = pos[None, :] < cur[:, None]         # (B, smax), per row
+        if window > 0:
+            valid &= pos[None, :] >= jnp.maximum(cur - window, 0)[:, None]
+        mask = valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v_cache)
     return out.reshape(b, sq, h, hd)

@@ -125,6 +125,72 @@ def test_plan_decode_block_divides_cache():
     assert autotune.plan_decode(128, 2, 64, 64, 32, block_s=512) == 128
 
 
+def test_plan_decode_serve_page_aligned_shapes():
+    """The serve engine's paged KV cache presents lengths that are page
+    multiples, not powers of two (3 pages, 5 pages, ...).  Every such
+    length must still get a dividing block so the decode grid has no
+    overhang row."""
+    for page in (64, 128):
+        for pages in (1, 2, 3, 5, 6, 7, 12):
+            seq = pages * page
+            blk = autotune.plan_decode(seq, 2, 32, 32, 32,
+                                       backend="interpret")
+            assert seq % blk == 0 and blk >= autotune.MIN_BLOCK
+
+
+def test_plan_serve_batch_picks_batch_tiled_mega():
+    """Serving batch sizes: the full-batch softmax transient blows
+    MEGA_BUDGET, but one batch row's worth fits — the planner falls back
+    to the grid-over-B mega variant instead of abandoning the flat
+    single-step chain."""
+    plan = autotune.plan_attention(512, 512, 64, 64, 4, 2, 16, 32,
+                                   True, 0, 512, backend="interpret")
+    assert plan.mega_fwd_bt and not plan.mega_fwd
+    assert plan.mega_bwd_bt and not plan.mega_bwd
+    # the budget accounting must be per batch row, not the full tensor
+    assert plan.vmem_bytes <= autotune.MEGA_BUDGET["interpret"]
+    # batch 1 has no separate bt variant — it IS the full mega
+    single = autotune.plan_attention(512, 512, 64, 64, 4, 2, 1, 32,
+                                     True, 0, 512, backend="interpret")
+    assert not single.mega_fwd_bt and not single.mega_bwd_bt
+
+
+def test_batch_tiled_mega_gradcheck_vs_twin():
+    """The batch-tiled mega kernels reuse the full-batch bodies with b=1
+    blocks and a (B,) grid; values AND grads must match the jnp twin,
+    causal and windowed."""
+    from repro.kernels import flash_attention as fa
+
+    base = autotune.plan_attention(128, 128, 32, 32, 2, 2, 4, 32,
+                                   True, 0, 128, backend="interpret")
+    plan = dataclasses.replace(base, mega_fwd=False, mega_bwd=False,
+                               mega_fwd_bt=True, mega_bwd_bt=True)
+    q, k, v = _mk(jax.random.PRNGKey(3), 4, 128, 4, 2, 32)
+
+    def tr(x):
+        return jnp.transpose(x, (0, 2, 1, 3))   # model -> kernel layout
+
+    for window in (0, 48):
+        def loss_bt(q_, k_, v_):
+            out = fa.flash_attention(tr(q_), tr(k_), tr(v_), causal=True,
+                                     window=window, interpret=True,
+                                     plan=plan)
+            return jnp.sum(jnp.sin(out))
+
+        def loss_twin(q_, k_, v_):
+            out = attention.flash_attention_jnp(
+                q_, k_, v_, jnp.zeros((), jnp.float32), True, window)
+            return jnp.sum(jnp.sin(tr(out)))
+
+        vp, gp = jax.value_and_grad(loss_bt, argnums=(0, 1, 2))(q, k, v)
+        vt, gt = jax.value_and_grad(loss_twin, argnums=(0, 1, 2))(q, k, v)
+        np.testing.assert_allclose(float(vp), float(vt),
+                                   atol=3e-4, rtol=1e-5)
+        for a, b_ in zip(gp, gt):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       atol=3e-4, rtol=1e-4)
+
+
 def test_plan_copy_chunk_fits_budget():
     for rows in (256, 4096, 131072, 1 << 20):
         chunk = autotune.plan_copy_chunk(rows, 12 * 2 ** 20)
