@@ -20,7 +20,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 _SECTIONS = ("bench_lid", "bench_map", "bench_guidtable", "bench_fileio",
              "bench_partition", "bench_contention", "bench_serve",
-             "bench_flash", "bench_train", "bench_roofline")
+             "bench_flash", "bench_moe", "bench_train", "bench_roofline")
 
 
 def main() -> None:

@@ -49,6 +49,11 @@ def compare(old: dict, new: dict, name: str,
             threshold = MAKESPAN_THRESHOLD   # virtual time: deterministic
         elif key.startswith(("makespan", "p50_", "p99_")):
             threshold = MAKESPAN_THRESHOLD   # latency percentiles likewise
+        elif key.endswith("_bytes") or "_bytes_" in key:
+            # byte counters (e.g. MoE a2a exchange volume, HLO collective
+            # traffic) are LOWER-is-better and deterministic — derived from
+            # compiled HLO, not timers — so they get the tight threshold
+            threshold = MAKESPAN_THRESHOLD
         elif key.endswith("_ms") or key.endswith("_s"):
             threshold = WALL_THRESHOLD
         else:

@@ -36,6 +36,11 @@ class ModelConfig:
     moe_dense_residual: bool = False # arctic: dense FFN in parallel with MoE
     first_k_dense: int = 0           # deepseek-v2: leading dense layers
     capacity_factor: float = 1.25
+    # EP combine under a "model" mesh axis: "a2a" exchanges capacity
+    # buckets with all_to_all (default); "psum" replicates tokens over
+    # "model" and psums the combine (legacy baseline, and the automatic
+    # fallback when seq does not divide the model axis)
+    moe_dispatch: str = "a2a"
 
     # --- MLA (deepseek-v2) ---
     use_mla: bool = False

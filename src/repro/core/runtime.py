@@ -140,6 +140,13 @@ class Stats:
     # spill-file slots handed back out of the free list instead of growing
     # the file (slot reuse — see Runtime._spill_shard)
     spill_slots_reused: int = 0
+    # MoE dispatch gauges (stamped by the Trainer from the last step's
+    # metrics): (token, choice) pairs dropped on bucket overflow, their
+    # fraction of all routed pairs, and the per-device bytes the two
+    # capacity-bucket all_to_all exchanges move per layer
+    moe_dropped_tokens: int = 0
+    moe_overflow_rate: float = 0.0
+    moe_a2a_bytes: int = 0
     makespan: float = 0.0
 
     def snapshot(self) -> Dict[str, float]:

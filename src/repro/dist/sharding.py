@@ -341,3 +341,32 @@ def partition_tree_of(shape: Tuple[int, ...], itemsize: int,
     """
     return [r for _dev, ranges in device_ranges_of(shape, itemsize, sharding)
             for r in ranges]
+
+
+def moe_bucket_ranges(num_experts: int, capacity: int, width: int,
+                      itemsize: int, ctx: ShardCtx) -> List[Tuple[int, int]]:
+    """§6 destination ranges of one shard's ``(E, C, width)`` a2a bucket.
+
+    The capacity-bucketed MoE dispatch packs each source shard's tokens
+    into per-destination-expert buckets; the ``all_to_all`` then hands
+    destination shard *j* exactly the contiguous range covering its
+    experts ``[j·E/m, (j+1)·E/m)`` — the same NamedSharding →
+    disjoint-``(offset, size)`` lowering the expert banks use, so the
+    exchanged buckets are literally a §6 partitioning of the bucket block
+    (tests hand these ranges to ``db_partition``).  Distinct ranges only
+    (replicated mesh axes deduplicated), in offset order; without an
+    active expert-parallel axis the whole block is one local range.
+    """
+    shape = (num_experts, capacity, width)
+    total = num_experts * capacity * width * itemsize
+    ep = ctx.resolve("ep", num_experts) if ctx.mesh is not None else None
+    if ep is None:
+        return [(0, total)]
+    sharding = NamedSharding(ctx.mesh, P(ep, None, None))
+    seen = set()
+    out: List[Tuple[int, int]] = []
+    for r in partition_tree_of(shape, itemsize, sharding):
+        if r not in seen:
+            seen.add(r)
+            out.append(r)
+    return sorted(out)

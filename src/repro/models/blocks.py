@@ -20,7 +20,7 @@ from .layers import (Params, apply_rope, cast_params, gelu_mlp,
                      gelu_mlp_init, layernorm, layernorm_init, mlp, mlp_init,
                      rmsnorm, rmsnorm_init, _dtype)
 from .mamba import mamba_decode, mamba_init, mamba_prefill, mamba_train
-from .moe import moe_ffn, moe_init
+from .moe import moe_ffn, moe_init, zero_aux
 import numpy as np
 
 
@@ -112,7 +112,8 @@ def _sp(x):
 
 
 def decoder_layer_train(p: Params, x: jax.Array, cfg, positions: jax.Array,
-                        kind: str) -> Tuple[jax.Array, jax.Array]:
+                        kind: str) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Returns (x, aux dict) — see ``moe.zero_aux`` for the aux schema."""
     p = cast_params(p, cfg.dtype)
     x = _sp(x)
     h = rmsnorm(p["ln1"], x, cfg.norm_eps)
@@ -123,7 +124,7 @@ def decoder_layer_train(p: Params, x: jax.Array, cfg, positions: jax.Array,
     if kind.endswith("moe"):
         f, aux = moe_ffn(p["moe"], h, cfg)
     else:
-        f, aux = mlp(p["mlp"], h), jnp.zeros((), jnp.float32)
+        f, aux = mlp(p["mlp"], h), zero_aux()
     return _sp(x + f), aux
 
 

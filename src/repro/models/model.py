@@ -145,12 +145,17 @@ class LanguageModel:
 
     def _backbone_train(self, params: Params, x: jax.Array,
                         extra: Optional[Dict[str, jax.Array]] = None
-                        ) -> Tuple[jax.Array, jax.Array]:
-        """Returns (hidden, aux_loss_sum)."""
+                        ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        """Returns (hidden, aux dict summed over layers — moe.zero_aux
+        schema: balance loss + dispatch drop/byte stats)."""
+        from .moe import zero_aux
         cfg = self.cfg
         positions = jnp.arange(x.shape[1])[None, :]
-        aux0 = jnp.zeros((), jnp.float32)
+        aux0 = zero_aux()
         fam = cfg.family
+
+        def _acc(aux, a):
+            return jax.tree_util.tree_map(jnp.add, aux, a)
 
         if fam in ("dense", "vlm", "moe"):
             if fam == "moe":
@@ -166,14 +171,14 @@ class LanguageModel:
                     xx, aux = carry
                     xx, a = blocks.decoder_layer_train(p_l, xx, dcfg,
                                                        positions, dkind)
-                    return (xx, aux + a), None
+                    return (xx, _acc(aux, a)), None
                 (x, aux0), _ = jax.lax.scan(_remat(dbody, cfg), (x, aux0),
                                             params["dense_layers"])
 
             def body(carry, p_l):
                 xx, aux = carry
                 xx, a = blocks.decoder_layer_train(p_l, xx, cfg, positions, kind)
-                return (xx, aux + a), None
+                return (xx, _acc(aux, a)), None
             (x, aux), _ = jax.lax.scan(_remat(body, cfg), (x, aux0),
                                        params["layers"])
             return rmsnorm(params["final_norm"], x, cfg.norm_eps), aux
@@ -280,8 +285,14 @@ class LanguageModel:
                            -1, dtype=targets.dtype)
             targets = jnp.concatenate([pad, targets], axis=1)
         loss, metrics = self.lm_loss(params, h, targets)
-        total = loss + 0.01 * aux + 1e-4 * metrics["z_loss"]
-        metrics["aux_loss"] = aux
+        total = loss + 0.01 * aux["loss"] + 1e-4 * metrics["z_loss"]
+        metrics["aux_loss"] = aux["loss"]
+        # MoE dispatch stats (zeros for non-MoE families) — the trainer
+        # surfaces these as Stats gauges, bench_moe snapshots them
+        metrics["moe_dropped_tokens"] = aux["dropped"]
+        metrics["moe_overflow_rate"] = aux["dropped"] / jnp.maximum(
+            aux["routed"], 1.0)
+        metrics["moe_a2a_bytes"] = aux["a2a_bytes"]
         metrics["loss"] = total
         return total, metrics
 

@@ -56,10 +56,12 @@ def make_train_step(model: LanguageModel, oc: OptimizerConfig):
             lambda p: jnp.zeros(p.shape, acc_dt), params)
         m0 = {k: jnp.zeros((), jnp.float32)
               for k in ("loss", "ce_loss", "z_loss", "accuracy", "tokens",
-                        "aux_loss")}
+                        "aux_loss", "moe_dropped_tokens",
+                        "moe_overflow_rate", "moe_a2a_bytes")}
         (g, m), _ = jax.lax.scan(micro, (g0, m0), micro_batch)
         g = jax.tree_util.tree_map(lambda x: x / a, g)
-        m = {k: v / a if k != "tokens" else v for k, v in m.items()}
+        summed = ("tokens", "moe_dropped_tokens", "moe_a2a_bytes")
+        m = {k: v / a if k not in summed else v for k, v in m.items()}
         return g, m
 
     def train_step(state: TrainState, batch: Dict[str, jax.Array]

@@ -169,5 +169,12 @@ class Trainer:
         rt.run()
         for t in self._ckpt_threads:
             t.join()
+        if self.history:
+            last = self.history[-1]
+            rt.stats.moe_dropped_tokens = int(
+                last.get("moe_dropped_tokens", 0))
+            rt.stats.moe_overflow_rate = float(
+                last.get("moe_overflow_rate", 0.0))
+            rt.stats.moe_a2a_bytes = int(last.get("moe_a2a_bytes", 0))
         self.last_runtime_stats = rt.stats
         return holder["state"]

@@ -45,12 +45,13 @@ def test_moe_shardmap_parity():
 
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sh),
                                atol=2e-4, rtol=2e-4)
-    assert abs(float(aux_ref) - float(aux_sh)) < 1e-5
+    assert abs(float(aux_ref["loss"]) - float(aux_sh["loss"])) < 1e-5
+    assert float(aux_sh["dropped"]) == float(aux_ref["dropped"]) == 0.0
 
     # gradients too
     def loss(p, xx):
         y, a = M.moe_ffn(p, xx, cfg)
-        return jnp.sum(y ** 2) + 0.01 * a
+        return jnp.sum(y ** 2) + 0.01 * a["loss"]
     g_ref = jax.grad(loss)(params, x)
     with use_mesh(mesh):
         g_sh = jax.jit(jax.grad(loss))(params, x)
