@@ -119,6 +119,8 @@ class IoQueue:
 
     def complete(self, op: IoOp) -> None:
         """Bookkeeping when an op's MIoDone is delivered (or dropped)."""
+        if self.rt._san is not None:
+            self.rt._san.on_io_done(op)
         self.inflight = max(0, self.inflight - 1)
         if op.kind == "read":
             self.reads_inflight = max(0, self.reads_inflight - 1)

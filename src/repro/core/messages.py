@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 from .guid import DbMode, Guid, Lid
 
@@ -24,6 +24,10 @@ class Message:
     src_node: int = dataclasses.field(init=False, default=-1)
     dst_node: int = dataclasses.field(init=False, default=-1)
     uid: int = dataclasses.field(init=False, default=-1)
+    # sanitizer-only: sender's vector-clock snapshot, stamped at send time
+    # when ``Runtime(sanitize=...)`` is on (class attr keeps the off path
+    # allocation-free)
+    _san_clock = None
 
     def stamp(self, src: int, dst: int) -> "Message":
         self.src_node = src

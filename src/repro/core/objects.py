@@ -52,15 +52,18 @@ class _Shard:
     a Guid's seq is unique, so probes never hash or compare full Guid
     triples — int keys keep every dict operation at C level.  ``destroyed``
     counts objects removed from this shard over its lifetime; ``spilled``
-    counts members whose buffers currently live in the node's spill file.
+    counts members whose buffers currently live in the node's spill file;
+    ``tombstones`` counts fired ONCE-event tombstones still parked in
+    ``objs`` (see :meth:`ObjectTable.retire_event_shards`).
     """
 
-    __slots__ = ("objs", "destroyed", "spilled")
+    __slots__ = ("objs", "destroyed", "spilled", "tombstones")
 
     def __init__(self) -> None:
         self.objs: Dict[int, Any] = {}
         self.destroyed = 0
         self.spilled = 0
+        self.tombstones = 0
 
     def hot(self) -> bool:
         """A shard is hot while it holds any buffer-resident live object."""
@@ -87,7 +90,7 @@ class ObjectTable:
     (``Runtime(spill_threshold=…)``).
     """
 
-    __slots__ = ("_kinds", "_bits", "_destroyed_dropped")
+    __slots__ = ("_kinds", "_bits", "_destroyed_dropped", "_retired_events")
 
     def __init__(self, shard_bits: int = GUID_SHARD_BITS) -> None:
         self._bits = shard_bits
@@ -96,6 +99,10 @@ class ObjectTable:
         # destroyed counts of shards already reclaimed, aggregated per kind
         self._destroyed_dropped: Dict[ObjectKind, int] = \
             {k: 0 for k in ObjectKind}
+        # retired ONCE-event shards compacted to {shard idx: {seq: (guid,
+        # payload)}}; a late dependence on a retired event synthesizes its
+        # tombstone from this alone (see retire_event_shards)
+        self._retired_events: Dict[int, Dict[int, Tuple[Guid, Any]]] = {}
 
     @property
     def shard_bits(self) -> int:
@@ -117,11 +124,31 @@ class ObjectTable:
     def get(self, gid: Guid, default: Any = None) -> Any:
         seq = gid.seq
         try:
-            return self._kinds[gid.kind][seq >> self._bits].objs.get(seq, default)
+            obj = self._kinds[gid.kind][seq >> self._bits].objs.get(seq, _MISSING)
         except (KeyError, AttributeError):
             # unknown shard, or a non-Guid probe (e.g. an unresolved Lid)
             # — same "not found" answer the flat dict gave
-            return default
+            obj = _MISSING
+        if obj is not _MISSING:
+            return obj
+        if self._retired_events and gid.__class__ is Guid \
+                and gid.kind is ObjectKind.EVENT:
+            obj = self._retired_hit(seq)
+            if obj is not _MISSING:
+                return obj
+        return default
+
+    def _retired_hit(self, seq: int, remove: bool = False) -> Any:
+        """Synthesize the tombstone of a retired ONCE event (or _MISSING)."""
+        idx = seq >> self._bits
+        r = self._retired_events.get(idx)
+        if r is None or seq not in r:
+            return _MISSING
+        guid, payload = r.pop(seq) if remove else r[seq]
+        if remove and not r:
+            del self._retired_events[idx]
+        return EventObj(guid, EventKind.ONCE,
+                        satisfied=True, payload=payload, destroyed=True)
 
     def pop(self, gid: Guid, default: Any = None) -> Any:
         try:
@@ -131,6 +158,11 @@ class ObjectTable:
             sh = shards[idx]
             obj = sh.objs.pop(seq)
         except (KeyError, AttributeError):
+            if self._retired_events and gid.__class__ is Guid \
+                    and gid.kind is ObjectKind.EVENT:
+                obj = self._retired_hit(gid.seq, remove=True)
+                if obj is not _MISSING:
+                    return obj   # already counted destroyed at retirement
             return default
         sh.destroyed += 1
         if not sh.objs:
@@ -177,6 +209,8 @@ class ObjectTable:
             for sh in shards.values():
                 self._destroyed_dropped[kind] += sh.destroyed + len(sh.objs)
             shards.clear()
+        # retired entries were already counted destroyed at retirement
+        self._retired_events.clear()
 
     # ------------------------------------------------- shard introspection
 
@@ -210,6 +244,48 @@ class ObjectTable:
         (including those whose shard was since reclaimed)."""
         return self._destroyed_dropped[kind] + \
             sum(sh.destroyed for sh in self._kinds[kind].values())
+
+    def note_tombstone(self, gid: Guid) -> None:
+        """A ONCE event in this table fired and became a tombstone (§3)."""
+        sh = self._kinds[gid.kind].get(gid.seq >> self._bits)
+        if sh is not None:
+            sh.tombstones += 1
+
+    def retire_event_shards(self) -> int:
+        """Compact fully-tombstoned ONCE-event shards (ROADMAP follow-on).
+
+        A fired ONCE event leaves a satisfiable tombstone in the table so
+        reordered late dependences still receive the payload — but a shard
+        holding *only* tombstones pays per-object dict storage for what is
+        semantically a satisfied-set.  Once such a shard's fan-out has
+        quiesced (every member is a tombstone), its ``{seq: (guid,
+        payload)}`` map replaces the shard: late dependences synthesize
+        the tombstone from it, everything else sees the events as
+        destroyed.  Returns the number of shards retired by this call;
+        the runtime accumulates it into ``Stats.tombstone_shards_retired``.
+        """
+        shards = self._kinds[ObjectKind.EVENT]
+        retired = 0
+        for idx in [i for i, sh in shards.items()
+                    if sh.objs and sh.tombstones >= len(sh.objs)]:
+            sh = shards[idx]
+            # tombstones can overcount if a tombstone was later popped
+            # (explicit destroy): verify before compacting, resync if stale
+            if not all(isinstance(o, EventObj) and o.destroyed and o.satisfied
+                       and o.kind == EventKind.ONCE
+                       for o in sh.objs.values()):
+                sh.tombstones = sum(
+                    1 for o in sh.objs.values()
+                    if isinstance(o, EventObj) and o.destroyed
+                    and o.satisfied and o.kind == EventKind.ONCE)
+                continue
+            self._retired_events[idx] = {
+                seq: (o.guid, o.payload) for seq, o in sh.objs.items()}
+            self._destroyed_dropped[ObjectKind.EVENT] += \
+                sh.destroyed + len(sh.objs)
+            del shards[idx]
+            retired += 1
+        return retired
 
     def note_spilled(self, gid: Guid) -> None:
         sh = self._kinds[gid.kind].get(gid.seq >> self._bits)

@@ -137,6 +137,19 @@ class Stats:
     table_shards: int = 0
     table_hot_shards: int = 0
     spilled_objects: int = 0
+    # fully-tombstoned ONCE-event shards compacted into per-shard
+    # satisfied-sets (cumulative — see ObjectTable.retire_event_shards)
+    tombstone_shards_retired: int = 0
+    # reclaimed-but-uncompacted bytes across all node spill files (the
+    # free-list holes), refreshed when run() returns
+    spill_frag_bytes: int = 0
+    # sanitizer gauges (Runtime(sanitize=...) / REPRO_SANITIZE=1): trace
+    # events recorded, hb-races among them, total hard findings, and
+    # quiescence advisories (leaks / dangling slots)
+    san_events: int = 0
+    san_races: int = 0
+    san_findings: int = 0
+    san_advisories: int = 0
     # spill-file slots handed back out of the free list instead of growing
     # the file (slot reuse — see Runtime._spill_shard)
     spill_slots_reused: int = 0
@@ -201,6 +214,7 @@ class Runtime:
         read_ahead: bool = True,
         spill_threshold: Optional[int] = None,
         shard_bits: int = GUID_SHARD_BITS,
+        sanitize: Any = None,
     ):
         self.num_nodes = num_nodes
         self.net_latency = float(net_latency)
@@ -259,6 +273,30 @@ class Runtime:
         # tasks currently occupying a virtual-time window (for
         # Stats.io_overlap_ticks: time IO and compute were both in flight)
         self._running_tasks = 0
+        # --- ocrsan (repro.analysis): None when off, so every hook site is
+        # one attribute check on the fast path.  The explicit parameter
+        # wins over the REPRO_SANITIZE environment variable; "1"/"strict"
+        # raise OcrSanError at run() return, anything else truthy records.
+        if sanitize is None:
+            sanitize = os.environ.get("REPRO_SANITIZE", "")
+        self._san = None
+        mode = str(sanitize).lower()
+        if mode not in ("", "0", "false", "none", "off"):
+            from ..analysis.trace import Sanitizer
+            self._san = Sanitizer(self, strict=mode in ("1", "strict"))
+
+    def san_report(self):
+        """The sanitizer's findings so far (``repro.analysis.SanitizerReport``).
+
+        Quiescence lints (lost wakeups, leaks, dangling slots) are
+        included only when the event heap is empty.  Raises
+        :class:`OcrError` if the runtime was built without ``sanitize``.
+        """
+        if self._san is None:
+            raise OcrError(
+                "sanitizer not enabled: pass Runtime(sanitize=True) "
+                "or set REPRO_SANITIZE=1")
+        return self._san.report()
 
     # ------------------------------------------------------------------ util
 
@@ -280,6 +318,8 @@ class Runtime:
         lid = Lid(node, n.lid_seq)
         n.lid_table[lid] = None
         n.unresolved_lids += 1
+        if self._san is not None:
+            self._san.on_lid_alloc(lid)
         return lid
 
     def _pick_node(self, hint: Optional[int]) -> int:
@@ -318,6 +358,8 @@ class Runtime:
     # ------------------------------------------------------ message transport
 
     def send(self, msg: Message, src: int, dst: int, at: Optional[float] = None) -> None:
+        if self._san is not None:
+            self._san.on_send(msg)
         msg.stamp(src, dst)
         when = self.clock if at is None else at
         node = self.nodes[src]
@@ -401,15 +443,21 @@ class Runtime:
                 self._do_db_copy(payload)
         self.stats.makespan = self.clock
         self._refresh_table_stats()
+        if self._san is not None:
+            self._san.on_run_return()
         return self.stats
 
     def _refresh_table_stats(self) -> None:
-        shards = hot = 0
+        shards = hot = frag = 0
         for n in self.nodes:
+            self.stats.tombstone_shards_retired += \
+                n.objects.retire_event_shards()
             shards += n.objects.shard_count()
             hot += n.objects.hot_shard_count()
+            frag += sum(sz for _, sz in n.spill_free)
         self.stats.table_shards = shards
         self.stats.table_hot_shards = hot
+        self.stats.spill_frag_bytes = frag
 
     def close(self) -> None:
         """Release host resources (per-node spill files)."""
@@ -439,6 +487,8 @@ class Runtime:
         the objects up get a clean :class:`OcrError` naming the dead node,
         and the node's spill file is reclaimed from disk.
         """
+        if self._san is not None:
+            self._san.on_kill_node(idx)
         node = self.nodes[idx]
         node.alive = False
         node.objects.clear()
@@ -480,7 +530,16 @@ class Runtime:
             self._log("DROP (dead node)", type(msg).__name__)
             return
         handler = getattr(self, f"_on_{type(msg).__name__}")
-        handler(msg)
+        if self._san is None:
+            handler(msg)
+            return
+        # the handler runs under the sender's clock snapshot (the §2
+        # receive edge); handlers never own a vector-clock component
+        tok = self._san.msg_begin(msg)
+        try:
+            handler(msg)
+        finally:
+            self._san.ctx_end(tok)
 
     # -- creation ----------------------------------------------------------
 
@@ -542,6 +601,10 @@ class Runtime:
         if p.get("output_event") is not None:
             edt.output_event = p["output_event"]
         self.nodes[node].objects.insert(edt)
+        if self._san is not None:
+            # base clock = creation context; slot satisfies join in later
+            # (NULL creation-time deps satisfy during the wiring below)
+            self._san.on_task_created(guid)
         # wire creation-time dependences
         modes = p.get("dep_modes") or [DbMode.RO] * len(depv)
         for slot, (dep, mode) in enumerate(zip(depv, modes)):
@@ -566,6 +629,8 @@ class Runtime:
         self._apply_lid_binding(msg.lid, msg.guid)
 
     def _apply_lid_binding(self, lid: Lid, guid: Guid) -> None:
+        if self._san is not None:
+            self._san.on_lid_bound(lid, guid)
         node = self.nodes[lid.node]
         if node.lid_table.get(lid) is None and lid in node.lid_table:
             node.unresolved_lids -= 1
@@ -609,6 +674,9 @@ class Runtime:
                 raise OcrError(f"dependence on destroyed event {src}")
             if obj.satisfied:
                 # sticky/latch by definition; once-events via tombstone
+                if self._san is not None:
+                    # the late dependent inherits the event's full history
+                    self._san.on_event_replay(obj.guid)
                 self.send(MSatisfy(target=msg.dest, slot=msg.slot, db=obj.payload),
                           msg.dst_node, self._owner(msg.dest))
             else:
@@ -649,6 +717,10 @@ class Runtime:
             raise OcrError(f"cannot satisfy {target}")
 
     def _satisfy_event(self, ev: EventObj, db: Any) -> None:
+        if self._san is not None:
+            # accumulate every satisfier's clock (latch decrements included
+            # — the fan-out must carry the join of all of them)
+            self._san.on_event_satisfied(ev)
         if ev.kind == EventKind.LATCH:
             ev.latch_count -= 1
             if ev.latch_count > 0:
@@ -664,12 +736,17 @@ class Runtime:
             # fire-once, then leave a satisfiable tombstone: a dependence
             # added after the fire (reordered delivery) still receives the
             # payload instead of racing against destruction
+            if not ev.destroyed:
+                self.nodes[ev.guid.node].objects.note_tombstone(ev.guid)
             ev.dependents = []
             ev.destroyed = True
 
     def _satisfy_slot(self, edt: EdtObj, slot: int, db: Any) -> None:
         if edt.slots[slot] is not UNSET:
             raise OcrError(f"slot {slot} of {edt.guid} satisfied twice")
+        if self._san is not None:
+            # dependence edge: the task's base clock joins this context
+            self._san.on_slot_satisfied(edt.guid)
         edt.slots[slot] = db
         edt.pending -= 1
         if edt.pending == 0:
@@ -745,6 +822,11 @@ class Runtime:
                 db.writer = edt.guid
                 db.dirty = True
                 db.version += 1     # an in-flight spill snapshot is now stale
+        if self._san is not None:
+            # birth of the task's vector-clock activity: base = creation ∨
+            # slot satisfies ∨ acquired locks' release clocks; its accesses
+            # are recorded against the §6 root blocks here
+            self._san.on_grant(edt, deps)
         self._execute(edt)
         return None
 
@@ -910,6 +992,8 @@ class Runtime:
         """Drop ``db``'s spilled status (re-materialized or destroyed) and
         return its spill-file slot to the node's free list."""
         db.spilled = False
+        if self._san is not None:
+            self._san.on_unspill(db.guid)
         node = self.nodes[db.guid.node]
         node.spilled = max(0, node.spilled - 1)
         node.objects.note_unspilled(db.guid)
@@ -966,7 +1050,16 @@ class Runtime:
         else:
             self._running_tasks += 1
         self._log("RUN", edt.guid, tmpl.func.__name__)
-        ret = tmpl.func(list(edt.paramv), depv, ctx)
+        if self._san is None:
+            ret = tmpl.func(list(edt.paramv), depv, ctx)
+        else:
+            # the body runs under its own activity; nested synchronous
+            # grants (API calls that grant immediately) stack correctly
+            tok = self._san.task_begin(edt.guid)
+            try:
+                ret = tmpl.func(list(edt.paramv), depv, ctx)
+            finally:
+                self._san.ctx_end(tok)
         self.stats.tasks_executed += 1
         end = edt.start_time + edt.duration + ctx.blocking_time
         edt.end_time = end
@@ -981,13 +1074,32 @@ class Runtime:
             # itself called kill_node): nothing retires, nothing satisfies
             # — locks it held on surviving nodes' blocks stay held, the
             # standard fail-stop hazard a recovery layer must handle
+            if self._san is not None:
+                self._san.task_lost(guid)
             return
+        if self._san is None:
+            self._task_retire(guid, ret, edt)
+            return
+        # retirement (lock releases, output-event satisfy, wakes) runs
+        # under the task's clock, one tick past the body; the clock then
+        # folds into the driver's join set at run() return
+        tok = self._san.task_end_begin(guid)
+        try:
+            self._task_retire(guid, ret, edt)
+        finally:
+            self._san.task_end_finish(guid, tok)
+
+    def _task_retire(self, guid: Guid, ret: Any, edt: EdtObj) -> None:
         released: List[DbObj] = []
         for db, mode in self._dep_dbs(edt):
             if mode in (DbMode.RO, DbMode.CONST):
                 db.readers = max(0, db.readers - 1)
+                if self._san is not None:
+                    self._san.on_release(db, False)
             elif db.writer == guid:
                 db.writer = None
+                if self._san is not None:
+                    self._san.on_release(db, True)
             if db.pending_destroy and not db.locked():
                 self._destroy_db(db)   # wakes its waiters itself
             else:
@@ -1147,6 +1259,8 @@ class Runtime:
             run.append(entry)
         if run:
             _flush(run)
+        if self._san is not None:
+            self._san.on_spill(len(victims), node.idx)
         self._log("SPILL", len(victims), "blocks ->", node.spill_path)
 
     def _finish_spill(self, op: Any) -> None:
@@ -1204,6 +1318,11 @@ class Runtime:
     def _destroy_db(self, db: DbObj) -> None:
         if db.partitions:
             raise OcrError(f"destroying {db.guid} while partitions are live")
+        if self._san is not None:
+            # checks §6.2 child-first order against the sanitizer's own
+            # registry; a destroyed partition folds its lock history into
+            # the parent's release clock (quiescence edge)
+            self._san.on_db_destroyed(db)
         if db.spilled:
             if db.file_guid is not None and db.dirty:
                 # a dirty §5 chunk must write back its real contents below:
@@ -1269,6 +1388,7 @@ class Runtime:
                 f"get arrived")
         if not (0 <= msg.index < m.size):
             raise OcrError(f"map index {msg.index} out of range [0,{m.size})")
+        created = msg.index not in m.entries
         if msg.index not in m.entries:
             # exactly-once creation, synchronized at the owning node
             m.creator_calls += 1
@@ -1284,6 +1404,9 @@ class Runtime:
                     "EDT_PROP_MAPPED binding the provided LID")
             m.entries[msg.index] = bound
         guid = m.entries[msg.index]
+        if self._san is not None:
+            # §4: exactly-once creation, memoized reuse per index
+            self._san.on_map_get(m, msg.index, created, guid)
         if msg.lid is not None:
             self._pending_lid_msg.pop(msg.lid, None)
             self.send(MMap(lid=msg.lid, guid=guid), msg.dst_node, msg.lid.node)
@@ -1341,13 +1464,22 @@ class Runtime:
             ordered = any(spans_overlap(s) for s in by_dst.values())
         if ordered:
             for src_id, dst_id, m in resolved:
-                sbuf = self._materialize(self.lookup(src_id))
-                dst = self.lookup(dst_id)
-                dbuf = self._materialize(dst)
-                dst.version += 1
-                dbuf[m.dst_offset: m.dst_offset + m.size] = \
-                    sbuf[m.src_offset: m.src_offset + m.size]
-                self._copy_done(m)
+                tok = self._san.copy_begin(m) if self._san is not None else None
+                try:
+                    src = self.lookup(src_id)
+                    dst = self.lookup(dst_id)
+                    if self._san is not None:
+                        self._san.on_copy_access(src, m.src_offset, m.size, False)
+                        self._san.on_copy_access(dst, m.dst_offset, m.size, True)
+                    sbuf = self._materialize(src)
+                    dbuf = self._materialize(dst)
+                    dst.version += 1
+                    dbuf[m.dst_offset: m.dst_offset + m.size] = \
+                        sbuf[m.src_offset: m.src_offset + m.size]
+                    self._copy_done(m)
+                finally:
+                    if tok is not None:
+                        self._san.copy_end(tok)
             return
         groups: Dict[Tuple[Guid, Guid], List[MDbCopy]] = {}
         for src_id, dst_id, msg in resolved:
@@ -1363,7 +1495,16 @@ class Runtime:
                 for (d_off, s_off, size) in ranges:
                     dbuf[d_off: d_off + size] = sbuf[s_off: s_off + size]
             for m in msgs:
-                self._copy_done(m)
+                if self._san is None:
+                    self._copy_done(m)
+                    continue
+                tok = self._san.copy_begin(m)
+                try:
+                    self._san.on_copy_access(src, m.src_offset, m.size, False)
+                    self._san.on_copy_access(dst, m.dst_offset, m.size, True)
+                    self._copy_done(m)
+                finally:
+                    self._san.copy_end(tok)
 
     def _copy_done(self, m: MDbCopy) -> None:
         self.stats.bytes_copied += m.size
@@ -1398,6 +1539,16 @@ class Runtime:
         return True
 
     def _do_db_copy(self, msg: MDbCopy) -> None:
+        if self._san is None:
+            self._do_db_copy_inner(msg)
+            return
+        tok = self._san.copy_begin(msg)
+        try:
+            self._do_db_copy_inner(msg)
+        finally:
+            self._san.copy_end(tok)
+
+    def _do_db_copy_inner(self, msg: MDbCopy) -> None:
         dst: DbObj = self.lookup(self.resolve(msg.dst))
         src: DbObj = self.lookup(self.resolve(msg.src))
         if msg.copy_type == DB_COPY_PARTITION:
@@ -1414,6 +1565,11 @@ class Runtime:
                 dst.parent = src.guid
                 dst.offset_in_parent = msg.src_offset
                 src.partitions[dst.guid] = (msg.src_offset, msg.size)
+                if self._san is not None:
+                    # no bytes move: register the §6 child, no access
+                    self._san.on_partition_create(
+                        src, [(dst.guid, msg.src_offset, msg.size)],
+                        zero_copy=True)
                 # the view can mutate src's bytes without touching src's
                 # lock state: an in-flight spill snapshot of src is stale
                 src.version += 1
@@ -1426,6 +1582,9 @@ class Runtime:
                     if g != dst.guid and dst.guid not in ch}
                 self._partition_epoch += 1
             else:
+                if self._san is not None:
+                    self._san.on_copy_access(src, msg.src_offset, msg.size, False)
+                    self._san.on_copy_access(dst, msg.dst_offset, msg.size, True)
                 sbuf = self._materialize(src)
                 dbuf = self._materialize(dst)
                 dst.version += 1
@@ -1439,6 +1598,9 @@ class Runtime:
             if aligned_view:
                 self.stats.bytes_zero_copy += msg.size  # nothing moves
             else:
+                if self._san is not None:
+                    self._san.on_copy_access(src, msg.src_offset, msg.size, False)
+                    self._san.on_copy_access(dst, msg.dst_offset, msg.size, True)
                 sbuf = self._materialize(src)
                 dbuf = self._materialize(dst)
                 dst.version += 1
@@ -1447,6 +1609,9 @@ class Runtime:
                 self.stats.bytes_copied += msg.size
             self._destroy_db(src)  # PARTITION_BACK entails destruction of src
         else:
+            if self._san is not None:
+                self._san.on_copy_access(src, msg.src_offset, msg.size, False)
+                self._san.on_copy_access(dst, msg.dst_offset, msg.size, True)
             sbuf = self._materialize(src)
             dbuf = self._materialize(dst)
             dst.version += 1
@@ -1607,6 +1772,13 @@ class TaskCtx:
     def now(self) -> float:
         return self.rt.clock + self.blocking_time
 
+    def _ref(self, x: Any) -> Any:
+        """§3 scope check (sanitizer): an unbound LID referenced outside
+        the scope that allocated it is an escape."""
+        if self.rt._san is not None:
+            self.rt._san.on_ref(x)
+        return x
+
     # -- templates / EDTs ------------------------------------------------------
 
     def edt_template_create(self, func: Callable, paramc: int, depc: int) -> Guid:
@@ -1636,7 +1808,9 @@ class TaskCtx:
         * ``EDT_PROP_LID``: returns a LID immediately (§3);
         * ``EDT_PROP_MAPPED``: binds the map-provided ``mapped_id`` (§4).
         """
-        tmpl = self.rt.resolve(template)
+        tmpl = self.rt.resolve(self._ref(template))
+        for d in depv or ():
+            self._ref(d)
         depc = None
         t_obj = self.rt.try_lookup(tmpl) if isinstance(tmpl, Guid) else None
         if t_obj is not None:
@@ -1702,18 +1876,19 @@ class TaskCtx:
         return self._remote_create("event", payload, target, props)
 
     def event_satisfy(self, event: Any, db: Any = NULL_GUID) -> None:
-        tgt = self.rt.resolve(event)
+        tgt = self.rt.resolve(self._ref(event))
+        self._ref(db)
         self.rt.send(MSatisfy(target=tgt, slot=0, db=self.rt.resolve(db)),
                      self.node, self.rt._owner(tgt), at=self.now)
 
     def event_destroy(self, event: Any) -> None:
-        self.rt.send(MDestroy(target=self.rt.resolve(event)),
+        self.rt.send(MDestroy(target=self.rt.resolve(self._ref(event))),
                      self.node, self.rt._owner(event), at=self.now)
 
     def add_dependence(self, source: Any, dest: Any, slot: int,
                        mode: DbMode = DbMode.RO) -> None:
-        src = self.rt.resolve(source)
-        dst = self.rt.resolve(dest)
+        src = self.rt.resolve(self._ref(source))
+        dst = self.rt.resolve(self._ref(dest))
         if isinstance(src, Guid) and not is_null(src) \
                 and not self.rt.nodes[src.node].alive:
             raise OcrError(
@@ -1755,9 +1930,11 @@ class TaskCtx:
         return self._remote_create("db", payload, target, props), None
 
     def db_release(self, db: Any) -> None:
-        d: DbObj = self.rt.lookup(self.rt.resolve(db))
+        d: DbObj = self.rt.lookup(self.rt.resolve(self._ref(db)))
         if self.edt is not None and d.writer == self.edt.guid:
             d.writer = None
+            if self.rt._san is not None:
+                self.rt._san.on_release(d, True)
             self.rt.nodes[d.guid.node].spill_scan_at = -1.0
             if d.pending_destroy and not d.locked():
                 self.rt._destroy_db(d)   # wakes its waiters itself
@@ -1765,13 +1942,13 @@ class TaskCtx:
                 self.rt._wake_waiters(d.guid)
 
     def db_destroy(self, db: Any) -> None:
-        self.rt.send(MDestroy(target=self.rt.resolve(db)),
+        self.rt.send(MDestroy(target=self.rt.resolve(self._ref(db))),
                      self.node, self.rt._owner(db), at=self.now)
 
     def db_partition(self, db: Any, parts: Sequence[Tuple[int, int]],
                      props: int = 0) -> List[Guid]:
         """``ocrDbPartition`` (§6.2): split into disjoint contiguous partitions."""
-        parent: DbObj = self.rt.lookup(self.rt.resolve(db))
+        parent: DbObj = self.rt.lookup(self.rt.resolve(self._ref(db)))
         if parent.destroyed:
             raise OcrError(f"partitioning destroyed block {parent.guid}")
         if parent.static_partitioning and parent.partitions:
@@ -1812,6 +1989,9 @@ class TaskCtx:
             out.append(g)
         if props & OCR_DB_PARTITION_STATIC:
             parent.static_partitioning = True
+        if self.rt._san is not None:
+            self.rt._san.on_partition_create(
+                parent, [(g, o, s) for g, (o, s) in zip(out, parts)])
         return out
 
     def db_copy(self, dst: Any, dst_offset: int, src: Any, src_offset: int,
@@ -1819,8 +1999,8 @@ class TaskCtx:
         """``ocrDbCopy`` (§6.3): asynchronous copy; returns a completion event."""
         ev = self.event_create(EventKind.ONCE)
         self.rt.send(
-            MDbCopy(dst=self.rt.resolve(dst), dst_offset=dst_offset,
-                    src=self.rt.resolve(src), src_offset=src_offset, size=size,
+            MDbCopy(dst=self.rt.resolve(self._ref(dst)), dst_offset=dst_offset,
+                    src=self.rt.resolve(self._ref(src)), src_offset=src_offset, size=size,
                     copy_type=copy_type, completion_event=ev),
             self.node, self.rt._owner(src), at=self.now)
         return ev
@@ -1838,7 +2018,7 @@ class TaskCtx:
 
     def map_get(self, map_id: Any, index: int) -> Any:
         """``ocrMapGet``: returns a LID immediately; never blocks (§4)."""
-        m = self.rt.resolve(map_id)
+        m = self.rt.resolve(self._ref(map_id))
         owner = self.rt._owner(m)
         lid = self.rt._alloc_lid(self.node)
         self.rt.send(MMapGet(map_id=m, index=index, lid=lid),
@@ -1846,7 +2026,7 @@ class TaskCtx:
         return lid
 
     def map_destroy(self, map_id: Any) -> None:
-        self.rt.send(MDestroy(target=self.rt.resolve(map_id)),
+        self.rt.send(MDestroy(target=self.rt.resolve(self._ref(map_id))),
                      self.node, self.rt._owner(map_id), at=self.now)
 
     # -- file IO (§5) -----------------------------------------------------------------
@@ -1888,7 +2068,7 @@ class TaskCtx:
         promises to overwrite the whole range — e.g. checkpoint writers),
         so no read op is charged for ranges whose prior contents are dead.
         """
-        f: FileObj = self.rt.lookup(self.rt.resolve(file))
+        f: FileObj = self.rt.lookup(self.rt.resolve(self._ref(file)))
         if f.closed:
             raise OcrError(f"file {f.guid} already closed")
         if f.chunk_overlaps(offset, size):
@@ -1928,6 +2108,7 @@ class TaskCtx:
         if isinstance(x, Guid):
             return x
         if isinstance(x, Lid):
+            self._ref(x)
             return self.rt.force_resolve(x, self)
         raise OcrError(f"not an identifier: {x!r}")
 

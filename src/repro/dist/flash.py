@@ -36,7 +36,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels import ops as kernel_ops
 from repro.models.attention import (decode_attention, flash_min_seq,
                                     full_attention)
-from .sharding import ShardCtx, current_ctx, shard_map
+from .sharding import current_ctx, shard_map
 
 NEG_INF = -1e30
 

@@ -282,7 +282,6 @@ def _fwd_mega_call(q, k, v, offs, *, causal: bool, window: int,
                    kv_len: int, interpret: bool, with_lse: bool,
                    batch_tiled: bool = False):
     b, kh, g, sq, hd = q.shape
-    sk = k.shape[2]
     hd_v = v.shape[-1]
     spec = _bt if batch_tiled else _whole
     kernel = functools.partial(

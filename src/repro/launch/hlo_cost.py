@@ -24,9 +24,8 @@ Validated against analytic 6·N·D estimates in tests/test_hlo_cost.py.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

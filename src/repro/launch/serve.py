@@ -19,9 +19,8 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.serve.engine import (ModelBackend, ServeEngine, StepCost,
-                                SyntheticBackend, poisson_workload,
-                                run_static)
+from repro.serve.engine import (ModelBackend, ServeEngine, SyntheticBackend,
+                                poisson_workload, run_static)
 
 
 def _fmt(m: dict) -> str:

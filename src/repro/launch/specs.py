@@ -6,7 +6,7 @@ logical rules in ``repro.dist.sharding``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.dist.sharding import ShardCtx, param_shardings
 from repro.models.model import LanguageModel
-from repro.optim import OptimizerConfig, init_opt_state
+from repro.optim import OptimizerConfig
 from repro.train.steps import init_train_state
 
 S = jax.ShapeDtypeStruct

@@ -8,7 +8,6 @@ checkpoint write-back, straggler watchdog.
       --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
 """
 import argparse
-import dataclasses
 
 import jax
 

@@ -16,7 +16,7 @@ remain as the sub-quadratic jnp oracles the kernel gradchecks against.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

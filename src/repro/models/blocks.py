@@ -6,7 +6,7 @@ Every block is pre-norm residual.  Attention compute routes through
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ sharding rules can be expressed by key-path (see ``repro.dist.sharding``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ size independent of sequence length (why SSM archs run ``long_500k``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

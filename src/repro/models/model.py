@@ -16,7 +16,6 @@ segments.  The sequence-chunked cross-entropy never materializes full
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -34,9 +34,8 @@ disjoint §6 partitions the all-to-all exchanges (see
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

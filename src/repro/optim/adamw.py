@@ -15,7 +15,7 @@ Adam; tests assert a small model still descends with int8 states.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

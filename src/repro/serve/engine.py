@@ -229,7 +229,8 @@ class ServeEngine:
 
     def __init__(self, backend, *, b_cap: int, pool_pages: int,
                  max_pages: int, resident_budget: Optional[int] = None,
-                 io_latency: float = 2e-3, cost: Optional[StepCost] = None):
+                 io_latency: float = 2e-3, cost: Optional[StepCost] = None,
+                 sanitize: Any = None):
         self.backend = backend
         self.b_cap = b_cap
         self.pool_pages = pool_pages
@@ -239,7 +240,8 @@ class ServeEngine:
         self._eps = 1e-9
 
         self.rt = Runtime(spill_threshold=resident_budget,
-                          io_latency=io_latency, shard_bits=4)
+                          io_latency=io_latency, shard_bits=4,
+                          sanitize=sanitize)
         self.ctx = TaskCtx(self.rt, 0, None)
         self.cache_db, _ = self.ctx.db_create(pool_pages * backend.page_bytes)
         self.slot_map = self.ctx.map_create(b_cap, _slot_creator,
@@ -261,6 +263,11 @@ class ServeEngine:
         self._resume_ready: Dict[int, bytes] = {}
 
     # -- time / DES glue ----------------------------------------------------
+
+    def san_report(self):
+        """Sanitizer findings for the engine's runtime (needs
+        ``sanitize=`` at construction or ``REPRO_SANITIZE`` set)."""
+        return self.rt.san_report()
 
     def _flush(self) -> None:
         """Drain runtime events up to the engine clock, then pin the DES

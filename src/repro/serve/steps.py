@@ -11,8 +11,6 @@ retrace across decode lengths or batch compositions.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -9,7 +9,7 @@ degenerate case) is applied by the caller via ``donate_argnums=(0,)``.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

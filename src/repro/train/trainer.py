@@ -22,17 +22,16 @@ jnp flash twin.
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
 
 from repro import ckpt
-from repro.core import (DbMode, EDT_PROP_MAPPED, EventKind, NULL_GUID,
+from repro.core import (DbMode, EDT_PROP_MAPPED, NULL_GUID,
                         Runtime, UNINITIALIZED_GUID, spawn_main)
-from repro.dist.sharding import current_ctx, use_mesh
+from repro.dist.sharding import use_mesh
 from repro.models.model import LanguageModel
 from repro.optim import OptimizerConfig
 from .steps import init_train_state, make_train_step

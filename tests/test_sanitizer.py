@@ -1,0 +1,403 @@
+"""ocrsan: the happens-before race detector + OCR-invariant sanitizer.
+
+A detector that only ever runs green is untested, so every checker class
+here gets a *seeded-bug* test that makes it fire, next to a clean-program
+test proving the same construct does not false-positive when the program
+synchronizes properly:
+
+* hb-race — a §6.3 ``db_copy`` mutating a block a concurrently-granted
+  RO reader holds (copies bypass the lock protocol by design; the
+  sanitizer is what catches the missing completion-event edge);
+* lid-escape — a raw §3 LID handed to a task outside its home scope
+  before the binding lands;
+* guid-double-create / guid-non-memoized — §4 labeled-map invariants,
+  seeded by corrupting the map's entry table between gets;
+* partition-overlap / parent-released-before-children — §6 invariants,
+  seeded by disabling the runtime's own validation so only the
+  sanitizer's independent registry stands;
+* lost-wakeup — ``_wake_waiters`` stubbed out, a parked-but-grantable
+  EDT left behind at quiescence;
+* leak / dangling-slot — advisory-only quiescence lints.
+
+All seeded-bug runtimes use ``sanitize=True`` (record mode, explicit
+parameter overriding ``REPRO_SANITIZE``) and consume their findings via
+``san_report()`` so the conftest gate stays quiet.
+"""
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    DANGLING_SLOT,
+    GUID_DOUBLE_CREATE,
+    GUID_NON_MEMOIZED,
+    HB_RACE,
+    LEAK,
+    LID_ESCAPE,
+    LOST_WAKEUP,
+    OcrSanError,
+    PARENT_BEFORE_CHILDREN,
+    PARTITION_OVERLAP,
+    RaceDetector,
+    SanitizerReport,
+)
+from repro.core import (
+    DbMode,
+    EDT_PROP_LID,
+    EDT_PROP_MAPPED,
+    NULL_GUID,
+    Runtime,
+    TaskCtx,
+    spawn_main,
+)
+from repro.core.objects import DbObj
+
+
+def _noop(paramv, depv, api):
+    return NULL_GUID
+
+
+# --------------------------------------------------------------- hb-race
+
+
+def _race_graph(rt, sync_on_completion):
+    """Reader holds ``x`` RO while a copy writes into it.  With
+    ``sync_on_completion`` the reader deps on the copy's completion
+    event — the sanctioned §6.3 ordering — and there is no race."""
+    def main(paramv, depv, api):
+        x, xb = api.db_create(128)
+        y, yb = api.db_create(128)
+        yb[:] = 7
+        tmpl = api.edt_template_create(_noop, 0, 2)
+        ev = api.db_copy(x, 0, y, 0, 64)
+        deps = [ev, x] if sync_on_completion else [NULL_GUID, x]
+        api.edt_create(tmpl, depv=deps,
+                       dep_modes=[DbMode.RO, DbMode.RO], duration=50.0)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+
+
+def test_copy_into_held_block_is_a_race():
+    rt = Runtime(sanitize=True)
+    _race_graph(rt, sync_on_completion=False)
+    rep = rt.san_report()
+    assert rep.kinds().get(HB_RACE, 0) >= 1
+    f = next(f for f in rep.findings if f.kind == HB_RACE)
+    # the witness names both accesses with their vector clocks
+    assert len(f.witness) == 2
+    assert all("@" in clk for _label, clk in f.witness)
+    assert str(f).startswith("[hb-race]")
+
+
+def test_copy_completion_event_orders_the_reader():
+    rt = Runtime(sanitize=True)
+    _race_graph(rt, sync_on_completion=True)
+    rep = rt.san_report()
+    assert not rep.findings, str(rep)
+
+
+def test_strict_mode_raises_at_run_return():
+    rt = Runtime(sanitize="strict")
+    with pytest.raises(OcrSanError, match="hb-race"):
+        _race_graph(rt, sync_on_completion=False)
+
+
+def test_disjoint_ew_partition_writers_are_not_a_race():
+    """§6: EW siblings on disjoint partitions are the paper's sanctioned
+    parallelism — byte-range precision must keep them silent."""
+    rt = Runtime(sanitize=True)
+
+    def writer(paramv, depv, api):
+        depv[0].ptr[:] = paramv[0]
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        parent, _ = api.db_create(128)
+        kids = api.db_partition(parent, [(0, 64), (64, 64)])
+        tmpl = api.edt_template_create(writer, 1, 1)
+        for i, k in enumerate(kids):
+            api.edt_create(tmpl, paramv=[i + 1], depv=[k],
+                           dep_modes=[DbMode.EW])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert not rt.san_report().findings
+
+
+def test_serialized_rw_writers_are_not_a_race():
+    """Lock-order edges: back-to-back RW grants on one block are ordered
+    through its release clock."""
+    rt = Runtime(sanitize=True)
+
+    def main(paramv, depv, api):
+        x, _ = api.db_create(64)
+        tmpl = api.edt_template_create(_noop, 0, 1)
+        for _ in range(3):
+            api.edt_create(tmpl, depv=[x], dep_modes=[DbMode.RW])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert not rt.san_report().findings
+
+
+# ------------------------------------------------------------- lid-escape
+
+
+def test_raw_lid_crossing_scopes_is_flagged():
+    """§3: a LID is only meaningful in the scope that allocated it.  The
+    creator hands the raw (still unbound) LID to a zero-dep child task,
+    which executes synchronously before the binding lands."""
+    rt = Runtime(num_nodes=2, sanitize=True)
+
+    def thief(paramv, depv, api):
+        api.db_destroy(paramv[0])     # foreign unbound LID
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        lid, _ = api.db_create(16, props=EDT_PROP_LID, placement=1)
+        tmpl = api.edt_template_create(thief, 1, 0)
+        api.edt_create(tmpl, paramv=[lid])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert rt.san_report().kinds().get(LID_ESCAPE, 0) == 1
+
+
+def test_lid_used_in_home_scope_is_silent():
+    rt = Runtime(num_nodes=2, sanitize=True)
+
+    def main(paramv, depv, api):
+        lid, _ = api.db_create(16, props=EDT_PROP_LID, placement=1)
+        tmpl = api.edt_template_create(_noop, 0, 1)
+        api.edt_create(tmpl, depv=[lid])    # same scope: fine
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert not rt.san_report().findings
+
+
+# ------------------------------------------------- labeled-map invariants
+
+
+def _mapped_db_creator(ctx, lid, index, paramv, guidv):
+    ctx.db_create(8, props=EDT_PROP_MAPPED, mapped_id=lid)
+
+
+def _fresh_map(rt):
+    ctx = TaskCtx(rt, 0, None)
+    m = ctx.map_create(4, _mapped_db_creator)
+    ctx.map_get(m, 0)
+    rt.run()
+    return ctx, rt.lookup(m)
+
+
+def test_map_double_create_is_flagged():
+    """§4: the creator must run exactly once per index.  Wiping the entry
+    table forces a second creator invocation for index 0."""
+    rt = Runtime(sanitize=True)
+    ctx, m = _fresh_map(rt)
+    m.entries.clear()                 # seeded bug: lost memoization state
+    ctx.map_get(m.guid, 0)
+    rt.run()
+    assert rt.san_report().kinds().get(GUID_DOUBLE_CREATE, 0) == 1
+
+
+def test_map_non_memoized_reuse_is_flagged():
+    """§4: every get of one index must return the same GUID."""
+    rt = Runtime(sanitize=True)
+    ctx, m = _fresh_map(rt)
+    impostor, _ = ctx.db_create(8)
+    m.entries[0] = impostor           # seeded bug: entry swapped out
+    ctx.map_get(m.guid, 0)
+    rt.run()
+    assert rt.san_report().kinds().get(GUID_NON_MEMOIZED, 0) == 1
+
+
+def test_map_memoized_reuse_is_silent():
+    rt = Runtime(sanitize=True)
+    ctx, m = _fresh_map(rt)
+    for _ in range(3):
+        ctx.map_get(m.guid, 0)
+        ctx.map_get(m.guid, 1)
+        rt.run()
+    assert not rt.san_report().findings
+
+
+# ------------------------------------------------- partition invariants
+
+
+def test_partition_overlap_caught_independently(monkeypatch):
+    """§6: partitions of one block must be disjoint.  With the runtime's
+    own cross-call validation disabled, the sanitizer's registry is the
+    only line of defense left — and it must hold."""
+    rt = Runtime(sanitize=True)
+    monkeypatch.setattr(DbObj, "overlaps", lambda self, o, s: False)
+
+    def main(paramv, depv, api):
+        parent, _ = api.db_create(128)
+        api.db_partition(parent, [(0, 64)])
+        api.db_partition(parent, [(32, 64)])   # overlaps the live child
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    assert rt.san_report().kinds().get(PARTITION_OVERLAP, 0) == 1
+
+
+class _LyingDict(dict):
+    """Falsy even when populated — models a partition-table bookkeeping
+    bug that lets a parent destroy slip past the §6.2 deferral."""
+
+    def __bool__(self):
+        return False
+
+
+def test_parent_released_before_children_is_flagged():
+    rt = Runtime(sanitize=True)
+    ctx = TaskCtx(rt, 0, None)
+    parent, _ = ctx.db_create(128)
+    ctx.db_partition(parent, [(0, 64), (64, 64)])
+    p = rt.lookup(parent)
+    p.partitions = _LyingDict(p.partitions)    # seeded bug
+    ctx.db_destroy(parent)
+    rt.run()
+    assert rt.san_report().kinds().get(PARENT_BEFORE_CHILDREN, 0) == 1
+
+
+def test_child_first_release_is_silent():
+    rt = Runtime(sanitize=True)
+    ctx = TaskCtx(rt, 0, None)
+    parent, _ = ctx.db_create(128)
+    kids = ctx.db_partition(parent, [(0, 64), (64, 64)])
+    for k in kids:
+        ctx.db_destroy(k)
+    ctx.db_destroy(parent)
+    rt.run()
+    rep = rt.san_report()
+    assert not rep.findings and not rep.advisories, str(rep)
+
+
+# ------------------------------------------------------------ lost-wakeup
+
+
+def test_lost_wakeup_at_quiescence():
+    """A parked EDT whose every dependence is grantable at quiescence
+    means a wake was lost.  Seed: stub out the waiter wakeup."""
+    rt = Runtime(sanitize=True)
+
+    def main(paramv, depv, api):
+        x, _ = api.db_create(16)
+        tmpl = api.edt_template_create(_noop, 0, 1)
+        api.edt_create(tmpl, depv=[x], dep_modes=[DbMode.RW], duration=2.0)
+        api.edt_create(tmpl, depv=[x], dep_modes=[DbMode.RW], duration=1.0)
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt._wake_waiters = lambda g: None          # seeded bug
+    rt.run()
+    assert rt.san_report().kinds().get(LOST_WAKEUP, 0) >= 1
+
+
+# ------------------------------------------------- quiescence advisories
+
+
+def test_leaks_and_dangling_slots_are_advisory_only():
+    rt = Runtime(sanitize="strict")
+    ctx = TaskCtx(rt, 0, None)
+    ctx.db_create(32)                          # leaked data block
+    ctx.event_create()                         # leaked event
+    tmpl = ctx.edt_template_create(_noop, 0, 2)
+    ctx.edt_create(tmpl, depv=[NULL_GUID])     # slot 1 never satisfied
+    rt.run()                                   # strict — yet must not raise
+    rep = rt.san_report()
+    assert not rep.findings
+    kinds = rep.kinds()
+    assert kinds.get(LEAK, 0) >= 1
+    assert kinds.get(DANGLING_SLOT, 0) == 1
+    assert not bool(rep)                       # advisories never fail a run
+
+
+# ------------------------------------------------------- plumbing & stats
+
+
+def test_sanitize_off_leaves_no_trace():
+    rt = Runtime(sanitize=False)               # explicit off beats the env
+    _race_graph(rt, sync_on_completion=False)
+    assert rt._san is None
+    assert rt.stats.san_events == 0
+    with pytest.raises(Exception, match="sanitizer not enabled"):
+        rt.san_report()
+
+
+def test_stats_gauges_populated():
+    rt = Runtime(sanitize=True)
+    _race_graph(rt, sync_on_completion=False)
+    st = rt.stats
+    assert st.san_events > 0
+    assert st.san_races >= 1
+    assert st.san_findings >= 1
+    rt.san_report()
+
+
+def test_clean_mixed_program_is_clean():
+    """Tasks, events, copies, partitions, maps and file-free IO paths in
+    one accepted program: zero findings, and the report renders."""
+    rt = Runtime(sanitize=True, spill_threshold=4)
+
+    def stage2(paramv, depv, api):
+        assert int(depv[1].ptr[0]) == 5
+        api.db_destroy(depv[1].guid)
+        return NULL_GUID
+
+    def stage1(paramv, depv, api):
+        depv[0].ptr[:] = 5
+        return depv[0].guid
+
+    def main(paramv, depv, api):
+        x, _ = api.db_create(64)
+        t1 = api.edt_template_create(stage1, 0, 1)
+        t2 = api.edt_template_create(stage2, 0, 2)
+        g1, done = api.edt_create(t1, depv=[x], dep_modes=[DbMode.RW],
+                                  output_event=True)
+        api.edt_create(t2, depv=[done, x], dep_modes=[DbMode.RO, DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    rep = rt.san_report()
+    assert isinstance(rep, SanitizerReport)
+    assert not rep.findings, str(rep)
+    assert "ocrsan" in str(rep)
+
+
+def test_race_detector_unit():
+    """The VC engine itself: overlap + unordered fires, ordered or
+    disjoint stays silent, covered history is pruned."""
+    from repro.analysis import Access
+
+    d = RaceDetector()
+    root = object()
+    a = Access(act=1, tick=1, clock={1: 1}, write=True, lo=0, hi=8,
+               label="w0", t=0.0)
+    assert d.record(root, a) is None
+    # ordered successor (saw act 1 tick 1): silent, and it covers `a`
+    b = Access(act=2, tick=1, clock={1: 1, 2: 1}, write=True, lo=0, hi=8,
+               label="w1", t=1.0)
+    assert d.record(root, b) is None
+    assert d.history_len(root) == 1
+    # disjoint concurrent write: silent
+    c = Access(act=3, tick=1, clock={3: 1}, write=True, lo=8, hi=16,
+               label="w2", t=1.0)
+    assert d.record(root, c) is None
+    # overlapping unordered read vs w1: race
+    r = Access(act=4, tick=1, clock={4: 1}, write=False, lo=4, hi=12,
+               label="r0", t=2.0)
+    hit = d.record(root, r)
+    assert hit is not None and hit[0].label == "w1"
+    d.drop_root(root)
+    assert d.history_len(root) == 0

@@ -1,0 +1,118 @@
+"""Satellite gauges: ONCE-event tombstone shard retirement and spill-file
+fragmentation.
+
+§3 keeps satisfied ONCE events as tombstones so late ``add_dependence``
+calls replay instead of erroring.  A shard whose members are *all*
+tombstones retires into a compact ``{seq: (guid, payload)}`` side table
+(``Stats.tombstone_shards_retired``), and late arrivals synthesize the
+tombstone back from it — replay fidelity without the per-object cost.
+
+``Stats.spill_frag_bytes`` is the hole total in the per-node spill files
+(re-materialized victims return their slots to the free list), refreshed
+at every ``run()`` return.
+"""
+from repro.core import NULL_GUID, ObjectKind, Runtime, TaskCtx, spawn_main
+
+
+def test_fully_tombstoned_event_shards_retire():
+    rt = Runtime(shard_bits=2)
+    ctx = TaskCtx(rt, 0, None)
+    db, buf = ctx.db_create(8)
+    buf[:] = 3
+    evs = [ctx.event_create() for _ in range(16)]
+    for e in evs:
+        ctx.event_satisfy(e, db)
+    rt.run()
+
+    assert rt.stats.tombstone_shards_retired >= 1
+    table = rt.nodes[0].objects
+    retired = [gp for idx in table._retired_events.values()
+               for gp in idx.values()]
+    assert retired
+    g, payload = retired[0]
+    assert payload == db
+
+    # a late lookup synthesizes the tombstone: satisfied, with payload
+    o = rt.try_lookup(g)
+    assert o.satisfied and o.destroyed and o.payload == db
+
+    # live (unsatisfied) events keep their shards: none of them retired
+    live = ctx.event_create()
+    rt.run()
+    assert rt.try_lookup(live).satisfied is False
+
+
+def test_late_dependence_on_retired_event_replays():
+    rt = Runtime(shard_bits=2)
+    ctx = TaskCtx(rt, 0, None)
+    db, buf = ctx.db_create(8)
+    buf[:] = 9
+    for _ in range(16):
+        ctx.event_satisfy(ctx.event_create(), db)
+    rt.run()
+    table = rt.nodes[0].objects
+    g, _payload = next(iter(next(iter(
+        table._retired_events.values())).values()))
+
+    seen = []
+
+    def late(paramv, depv, api):
+        seen.append(bytes(depv[0].ptr))
+        return NULL_GUID
+
+    tmpl = ctx.edt_template_create(late, 0, 1)
+    ctx.edt_create(tmpl, depv=[g])
+    rt.run()
+    assert seen == [bytes([9] * 8)]
+
+
+def test_destroy_of_retired_event_drops_the_entry():
+    rt = Runtime(shard_bits=2)
+    ctx = TaskCtx(rt, 0, None)
+    for _ in range(16):
+        ctx.event_satisfy(ctx.event_create(), NULL_GUID)
+    rt.run()
+    table = rt.nodes[0].objects
+    g, _ = next(iter(next(iter(table._retired_events.values())).values()))
+    before = table.live_count(ObjectKind.EVENT) \
+        if hasattr(table, "live_count") else None
+
+    ctx.event_destroy(g)
+    rt.run()
+    assert rt.try_lookup(g) is None
+    if before is not None:
+        assert table.live_count(ObjectKind.EVENT) == before
+
+
+def test_spill_frag_bytes_tracks_freed_interior_slots():
+    rt = Runtime(spill_threshold=2, io_latency=0.5)
+    made = []
+
+    def maker(paramv, depv, api):
+        for i in range(8):
+            g, b = api.db_create(16)
+            b[:] = i + 1
+            made.append(g)
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    rt.run()
+    spilled = [g for g in made if rt.lookup(g).spilled]
+    assert len(spilled) == 6
+    # victims packed contiguously from offset 0: no holes yet
+    assert rt.stats.spill_frag_bytes == 0
+
+    # re-materialize a strictly interior victim: its slot becomes a hole
+    mid = sorted(spilled, key=lambda g: rt.lookup(g).spill_offset)[2]
+    rt.spill_threshold = None
+
+    def reader(paramv, depv, api):
+        assert int(depv[0].ptr[0]) != 0
+        return NULL_GUID
+
+    ctx = TaskCtx(rt, 0, None)
+    tmpl = ctx.edt_template_create(reader, 0, 1)
+    ctx.edt_create(tmpl, depv=[mid])
+    rt.run()
+    assert not rt.lookup(mid).spilled
+    assert rt.stats.spill_frag_bytes == 16
