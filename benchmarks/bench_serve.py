@@ -26,8 +26,12 @@ _SPILL = dict(rate=300.0, n=30, b_cap=8, pool_pages=20, max_pages=6,
 
 def _head_to_head(rate, n, b_cap, pool_pages):
     reqs = poisson_workload(n, rate, prompt_len=(8, 32), gen=(4, 16), seed=0)
+    # monitor=True exercises the registry hooks under the bench workload:
+    # virtual metrics must stay bit-identical to the monitor-off snapshot
+    # (the one-check-per-hook contract), and the serve.* histograms make
+    # p99 a measured distribution (p99_hist_* keys)
     eng = ServeEngine(SyntheticBackend(page_size=8), b_cap=b_cap,
-                      pool_pages=pool_pages, max_pages=8)
+                      pool_pages=pool_pages, max_pages=8, monitor=True)
     cont = eng.run(reqs)
     stat = run_static(reqs, b_cap=b_cap)
     return cont, stat
@@ -39,7 +43,8 @@ def _spill_row():
     eng = ServeEngine(SyntheticBackend(page_size=8), b_cap=_SPILL["b_cap"],
                       pool_pages=_SPILL["pool_pages"],
                       max_pages=_SPILL["max_pages"],
-                      resident_budget=_SPILL["resident_budget"])
+                      resident_budget=_SPILL["resident_budget"],
+                      monitor=True)
     m = eng.run(reqs)
     ok = all(len(r.out) == r.gen for r in reqs)
     return m, ok
@@ -96,5 +101,11 @@ def summary():
         "spill_resumes": spill["resumes"],
         "spill_complete": 1 if ok else 0,
         "creator_calls": cont["creator_calls"],
+        # histogram-sourced quantiles (monitoring registry, fixed bucket
+        # edges): deterministic lower-is-better, thresholded tight
+        "p50_hist_latency_s_continuous": cont["p50_hist_latency_s"],
+        "p99_hist_latency_s_continuous": cont["p99_hist_latency_s"],
+        "p99_hist_ttft_s_continuous": cont["p99_hist_ttft_s"],
+        "p99_hist_latency_s_spill": spill["p99_hist_latency_s"],
         "wall_time_s": wall,
     }

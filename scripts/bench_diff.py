@@ -1,8 +1,10 @@
 """Fail-soft perf-trajectory diff: fresh BENCH_*.json vs committed snapshots.
 
 Compares every ``makespan*`` key (deterministic virtual time — noise-free,
-so a tight threshold is meaningful) and, more loosely, ``*_ms`` wall-time
-keys.  A regression beyond the threshold emits a GitHub Actions warning
+so a tight threshold is meaningful), monitoring-registry histogram
+quantiles (``*_hist_*`` / ``*.p50`` / ``*.p99`` — fixed bucket edges, so
+likewise deterministic and lower-is-better) and, more loosely, ``*_ms``
+wall-time keys.  A regression beyond the threshold emits a GitHub Actions warning
 annotation (``::warning::``) and is reported in the exit summary, but the
 exit code stays 0 — perf drift warns, it does not block (ROADMAP "perf
 trajectory").
@@ -49,6 +51,10 @@ def compare(old: dict, new: dict, name: str,
             threshold = MAKESPAN_THRESHOLD   # virtual time: deterministic
         elif key.startswith(("makespan", "p50_", "p99_")):
             threshold = MAKESPAN_THRESHOLD   # latency percentiles likewise
+        elif "_hist_" in key or key.endswith((".p50", ".p99")):
+            # monitoring-registry histogram quantiles (fixed bucket edges,
+            # virtual time): deterministic LOWER-is-better, tight threshold
+            threshold = MAKESPAN_THRESHOLD
         elif key.endswith("_bytes") or "_bytes_" in key:
             # byte counters (e.g. MoE a2a exchange volume, HLO collective
             # traffic) are LOWER-is-better and deterministic — derived from

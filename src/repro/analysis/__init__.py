@@ -25,7 +25,7 @@ from .report import (
     PARENT_BEFORE_CHILDREN,
     SanitizerReport,
 )
-from .trace import Sanitizer, active_sanitizers
+from .trace import Sanitizer, active_sanitizers, load_trace
 
 __all__ = [
     "Access", "Clock", "RaceDetector", "join", "ordered",
@@ -33,5 +33,5 @@ __all__ = [
     "HB_RACE", "LID_ESCAPE", "GUID_DOUBLE_CREATE", "GUID_NON_MEMOIZED",
     "PARTITION_OVERLAP", "PARENT_BEFORE_CHILDREN", "LOST_WAKEUP",
     "LEAK", "DANGLING_SLOT",
-    "Sanitizer", "active_sanitizers",
+    "Sanitizer", "active_sanitizers", "load_trace",
 ]

@@ -33,10 +33,11 @@ other than the one that allocated it is an escape.
 from __future__ import annotations
 
 import collections
+import json
 from typing import Any, Deque, Dict, List, Optional, Tuple
 import weakref
 
-from repro.core.guid import DbMode, Guid, Lid
+from repro.core.guid import DbMode, Guid, Lid, ObjectKind
 from repro.core.objects import DbObj, EdtObj, EventObj
 
 from .hb import Access, Clock, RaceDetector, join
@@ -479,3 +480,55 @@ class Sanitizer:
 
     def consume(self) -> None:
         self._consumed = len(self.findings)
+
+    def export_trace(self, path: str) -> int:
+        """Dump the structured event ring buffer as JSONL for offline
+        analysis (one ``{"t", "kind", "info"}`` object per line; Guid /
+        Lid / tuple values are tagged so :func:`load_trace` round-trips
+        them exactly).  Returns the number of events written — at most
+        ``TRACE_CAP``, the ring bound."""
+        n = 0
+        with open(path, "w") as f:
+            for ev in self.trace_events:
+                rec = {"t": ev[0], "kind": ev[1],
+                       "info": [_enc_trace(x) for x in ev[2:]]}
+                f.write(json.dumps(rec) + "\n")
+                n += 1
+        return n
+
+
+def _enc_trace(x: Any) -> Any:
+    if isinstance(x, Guid):
+        return {"guid": [x.node, x.seq, x.kind.value]}
+    if isinstance(x, Lid):
+        return {"lid": [x.node, x.seq]}
+    if isinstance(x, tuple):
+        return {"tuple": [_enc_trace(v) for v in x]}
+    return x
+
+
+def _dec_trace(x: Any) -> Any:
+    if isinstance(x, dict):
+        if "guid" in x:
+            node, seq, kind = x["guid"]
+            return Guid(node, seq, ObjectKind(kind))
+        if "lid" in x:
+            return Lid(*x["lid"])
+        if "tuple" in x:
+            return tuple(_dec_trace(v) for v in x["tuple"])
+    return x
+
+
+def load_trace(path: str) -> List[Tuple]:
+    """Read a :meth:`Sanitizer.export_trace` JSONL file back into the
+    in-memory event-tuple form (``(t, kind, *info)``)."""
+    out: List[Tuple] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            out.append((rec["t"], rec["kind"])
+                       + tuple(_dec_trace(x) for x in rec["info"]))
+    return out

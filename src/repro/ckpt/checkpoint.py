@@ -46,23 +46,67 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import DbMode, NULL_GUID, Runtime, spawn_main
+from repro.monitoring import Registry
 
-
-@dataclasses.dataclass
-class CkptStats:
-    chunks_total: int = 0
-    chunks_written: int = 0
-    chunks_skipped: int = 0
-    bytes_written: int = 0
+# legacy CkptStats field → its ckpt.* monitoring-registry slot and zero
+_CKPT_FIELDS: Tuple[Tuple[str, str, Any], ...] = (
+    ("chunks_total", "ckpt.chunks_total", 0),
+    ("chunks_written", "ckpt.chunks_written", 0),
+    ("chunks_skipped", "ckpt.chunks_skipped", 0),
+    ("bytes_written", "ckpt.bytes_written", 0),
     # host-side full-leaf gathers of device-sharded arrays (the sharded
     # §6 path never performs one; the acceptance gate asserts 0)
-    host_gathers: int = 0
+    ("host_gathers", "ckpt.host_gathers", 0),
     # False when the save was halted (crash_at) before the manifest commit
-    committed: bool = True
+    ("committed", "ckpt.committed", True),
     # §5 IO-queue counters of the save's runtime (virtual time)
-    io_write_ops: int = 0
-    io_coalesced_writes: int = 0
-    makespan: float = 0.0
+    ("io_write_ops", "ckpt.io_write_ops", 0),
+    ("io_coalesced_writes", "ckpt.io_coalesced_writes", 0),
+    ("makespan", "ckpt.makespan", 0.0),
+)
+
+
+class CkptStats:
+    """Field-compatible view over the ``ckpt.*`` registry namespace.
+
+    Same refactor as ``core.runtime.Stats``: the former dataclass fields
+    are properties onto dotted monitoring-registry slots.  ``save``
+    binds the instance to the save-runtime's registry, so one mid-run
+    ``Registry.snapshot()`` shows the checkpoint gauges next to the same
+    run's ``io.*`` counters; standalone construction keeps a private
+    registry (old dataclass behaviour).
+    """
+
+    __slots__ = ("registry",)
+
+    def __init__(self, registry: Optional[Registry] = None):
+        self.registry = Registry() if registry is None else registry
+        declare = self.registry.declare
+        for _field, name, default in _CKPT_FIELDS:
+            declare(name, default)
+
+    def snapshot(self) -> Dict[str, Any]:
+        vals = self.registry._values
+        return {field: vals[name] for field, name, _default in _CKPT_FIELDS}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v!r}" for k, v in self.snapshot().items())
+        return f"CkptStats({body})"
+
+
+def _ckpt_property(name: str) -> property:
+    def _get(self: CkptStats) -> Any:
+        return self.registry._values[name]
+
+    def _set(self: CkptStats, value: Any) -> None:
+        self.registry._values[name] = value
+
+    return property(_get, _set)
+
+
+for _field, _name, _default in _CKPT_FIELDS:
+    setattr(CkptStats, _field, _ckpt_property(_name))
+del _field, _name, _default
 
 
 def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, Any]]:
@@ -240,7 +284,6 @@ def save(ckpt_dir: str, state: Any, step: int, *, chunk_bytes: int = 1 << 22,
     out_dir = os.path.join(ckpt_dir, f"step_{step}")
     tmp_dir = out_dir + ".tmp"
     os.makedirs(tmp_dir, exist_ok=True)
-    stats = CkptStats()
 
     prev_dir: Optional[str] = None
     prev_leaves: Dict[str, Any] = {}
@@ -252,6 +295,9 @@ def save(ckpt_dir: str, state: Any, step: int, *, chunk_bytes: int = 1 << 22,
 
     rt = Runtime(num_nodes=num_writers, io_latency=io_latency,
                  io_mode=io_mode)
+    # the save's stats share the save-runtime's registry: ckpt.* gauges
+    # land next to its io.* counters in one snapshot namespace
+    stats = CkptStats(rt.registry)
 
     # (leaf_idx, offset) -> payload bytes, consulted by writer EDT bodies
     pending_payloads: Dict[Tuple[int, int], bytes] = {}

@@ -54,7 +54,7 @@ __all__ = ["IoOp", "IoQueue"]
 class IoOp:
     """One disk operation (post-coalescing) on a node's IO queue."""
 
-    kind: str                         # "read" | "write" | "spill"
+    kind: str                         # "read" | "write" | "spill" | "compact"
     node: int
     path: str
     offset: int
@@ -88,6 +88,10 @@ class IoQueue:
         self._pending_writes: Dict[Tuple[int, str], List[IoOp]] = {}
         self.inflight = 0                 # ops submitted, completion not seen
         self.reads_inflight = 0
+        # monitoring only (rt._mon is not None): per-node start times of
+        # submitted ops, so queue_depth() can count ops still waiting for
+        # the disk without scanning the event heap
+        self._queued_starts: Dict[int, List[float]] = {}
 
     # ------------------------------------------------------------ plumbing
 
@@ -115,6 +119,10 @@ class IoQueue:
         if op.kind == "write" and not op.performed:
             self._pending_writes.setdefault((op.node, op.path),
                                             []).append(op)
+        if self.rt._mon is not None:
+            # publish the io.* gauges live at submit (not at run() return)
+            self._queued_starts.setdefault(op.node, []).append(op.start)
+            self.rt._mon.on_io(self)
         return done
 
     def complete(self, op: IoOp) -> None:
@@ -131,6 +139,27 @@ class IoQueue:
                     pend.remove(op)
                 if not pend:
                     del self._pending_writes[(op.node, op.path)]
+        if self.rt._mon is not None:
+            lst = self._queued_starts.get(op.node)
+            if lst is not None:
+                try:
+                    lst.remove(op.start)
+                except ValueError:
+                    pass
+                if not lst:
+                    del self._queued_starts[op.node]
+            self.rt._mon.on_io(self)
+
+    def queue_depth(self, node: Optional[int] = None) -> int:
+        """Submitted ops whose disk service hasn't started yet (queued
+        behind the platter, as opposed to ``inflight`` which also counts
+        the op currently being serviced).  Monitoring-only — the start
+        lists are maintained iff ``Runtime(monitor=...)`` is on."""
+        now = self.rt.clock
+        if node is not None:
+            return sum(1 for s in self._queued_starts.get(node, ()) if s > now)
+        return sum(1 for lst in self._queued_starts.values()
+                   for s in lst if s > now)
 
     # --------------------------------------------------------------- reads
 
@@ -168,6 +197,18 @@ class IoQueue:
         op = IoOp(kind="spill", node=node, path=path, offset=offset,
                   size=len(data), data=data, victims=victims,
                   chunks=len(victims))
+        return self._submit(op, self.rt.clock if at is None else at)
+
+    def submit_compact(self, node: int, path: str, plan: List[Tuple],
+                       live_bytes: int, at: Optional[float] = None) -> float:
+        """Enqueue a spill-file compaction sweep: one disk op for the
+        whole rewrite (the elevator's bulk-sweep analogue).  ``plan``
+        holds (db guid, old offset, new offset, size, version) per live
+        slot; ``Runtime._finish_compact`` re-verifies it at completion.
+        Accounted as a write op, kept out of the §5 elevator like spills.
+        """
+        op = IoOp(kind="compact", node=node, path=path, offset=0,
+                  size=live_bytes, victims=plan, chunks=len(plan))
         return self._submit(op, self.rt.clock if at is None else at)
 
     # -------------------------------------------------------------- writes

@@ -343,6 +343,10 @@ class EdtObj:
     output_event: Optional[Guid] = None
     duration: float = 1.0
     state: str = "created"   # created -> ready -> running -> done
+    # stamped at the created→ready transition when monitoring is on, so
+    # the grant-wait histogram (start_time - ready_time) measures virtual
+    # time spent ready-but-ungranted behind locks / IO deferrals
+    ready_time: float = -1.0
     start_time: float = -1.0
     end_time: float = -1.0
     destroyed: bool = False

@@ -65,6 +65,7 @@ from .guid import (
     is_null,
 )
 from .io_queue import IoQueue
+from ..monitoring import Monitor, Registry
 from .messages import (
     MCreate,
     MDbCopy,
@@ -109,61 +110,108 @@ __all__ = [
 ]
 
 
-@dataclasses.dataclass
-class Stats:
-    messages_sent: int = 0
-    messages_remote: int = 0
-    messages_deferred: int = 0
-    deferred_patched: int = 0
-    deferred_rescans: int = 0
-    blocking_roundtrips: int = 0
-    creator_calls: int = 0
-    tasks_executed: int = 0
-    waiter_wakeups: int = 0
-    reader_batch_grants: int = 0
-    bytes_copied: int = 0
-    bytes_zero_copy: int = 0
-    file_bytes_read: int = 0
-    file_bytes_written: int = 0
-    fused_copies: int = 0
-    io_read_ops: int = 0
-    io_write_ops: int = 0
-    io_reads_inflight_max: int = 0
-    io_coalesced_writes: int = 0
-    io_overlap_ticks: float = 0.0
+# Every legacy Stats field, its dotted registry name, and its zero value.
+# Declaration order is the dataclass field order Stats used to have, so
+# Stats.snapshot() keys come out identical to the old dataclasses.asdict.
+_STATS_FIELDS: Tuple[Tuple[str, str, Any], ...] = (
+    ("messages_sent", "runtime.messages_sent", 0),
+    ("messages_remote", "runtime.messages_remote", 0),
+    ("messages_deferred", "runtime.messages_deferred", 0),
+    ("deferred_patched", "runtime.deferred_patched", 0),
+    ("deferred_rescans", "runtime.deferred_rescans", 0),
+    ("blocking_roundtrips", "runtime.blocking_roundtrips", 0),
+    ("creator_calls", "runtime.creator_calls", 0),
+    ("tasks_executed", "runtime.tasks_executed", 0),
+    ("waiter_wakeups", "runtime.waiter_wakeups", 0),
+    ("reader_batch_grants", "runtime.reader_batch_grants", 0),
+    ("bytes_copied", "copy.bytes_copied", 0),
+    ("bytes_zero_copy", "copy.bytes_zero_copy", 0),
+    ("file_bytes_read", "io.file_bytes_read", 0),
+    ("file_bytes_written", "io.file_bytes_written", 0),
+    ("fused_copies", "copy.fused_copies", 0),
+    ("io_read_ops", "io.read_ops", 0),
+    ("io_write_ops", "io.write_ops", 0),
+    ("io_reads_inflight_max", "io.reads_inflight_max", 0),
+    ("io_coalesced_writes", "io.coalesced_writes", 0),
+    ("io_overlap_ticks", "io.overlap_ticks", 0.0),
     # GUID-table gauges (refreshed when run() returns): live shards across
     # all nodes, shards still holding a buffer-resident object, and data
     # blocks whose buffers currently live in a node spill file
-    table_shards: int = 0
-    table_hot_shards: int = 0
-    spilled_objects: int = 0
+    ("table_shards", "table.shards", 0),
+    ("table_hot_shards", "table.hot_shards", 0),
+    ("spilled_objects", "spill.objects", 0),
     # fully-tombstoned ONCE-event shards compacted into per-shard
     # satisfied-sets (cumulative — see ObjectTable.retire_event_shards)
-    tombstone_shards_retired: int = 0
+    ("tombstone_shards_retired", "table.tombstone_shards_retired", 0),
     # reclaimed-but-uncompacted bytes across all node spill files (the
     # free-list holes), refreshed when run() returns
-    spill_frag_bytes: int = 0
+    ("spill_frag_bytes", "spill.frag_bytes", 0),
     # sanitizer gauges (Runtime(sanitize=...) / REPRO_SANITIZE=1): trace
     # events recorded, hb-races among them, total hard findings, and
     # quiescence advisories (leaks / dangling slots)
-    san_events: int = 0
-    san_races: int = 0
-    san_findings: int = 0
-    san_advisories: int = 0
+    ("san_events", "san.events", 0),
+    ("san_races", "san.races", 0),
+    ("san_findings", "san.findings", 0),
+    ("san_advisories", "san.advisories", 0),
     # spill-file slots handed back out of the free list instead of growing
     # the file (slot reuse — see Runtime._spill_shard)
-    spill_slots_reused: int = 0
+    ("spill_slots_reused", "spill.slots_reused", 0),
+    # on-line spill-file compaction sweeps completed (see
+    # Runtime._finish_compact; enabled by spill_compact_threshold)
+    ("spill_compactions", "spill.compactions", 0),
     # MoE dispatch gauges (stamped by the Trainer from the last step's
     # metrics): (token, choice) pairs dropped on bucket overflow, their
     # fraction of all routed pairs, and the per-device bytes the two
     # capacity-bucket all_to_all exchanges move per layer
-    moe_dropped_tokens: int = 0
-    moe_overflow_rate: float = 0.0
-    moe_a2a_bytes: int = 0
-    makespan: float = 0.0
+    ("moe_dropped_tokens", "moe.dropped_tokens", 0),
+    ("moe_overflow_rate", "moe.overflow_rate", 0.0),
+    ("moe_a2a_bytes", "moe.a2a_bytes", 0),
+    ("makespan", "runtime.makespan", 0.0),
+)
+
+
+class Stats:
+    """Field-compatible view over the ``repro.monitoring`` registry.
+
+    Formerly a dataclass of ~35 counters refreshed only at ``run()``
+    return; now every field is a property reading/writing one dotted
+    registry slot (``messages_sent`` ↔ ``runtime.messages_sent``), so
+    the existing increment sites and committed bench snapshots keep
+    working bit-identically while ``Registry.snapshot()`` sees the
+    same numbers live, mid-run.  Standalone construction (``Stats()``)
+    makes a private registry, preserving the old dataclass behaviour.
+    """
+
+    __slots__ = ("registry",)
+
+    def __init__(self, registry: Optional[Registry] = None):
+        self.registry = Registry() if registry is None else registry
+        declare = self.registry.declare
+        for _field, name, default in _STATS_FIELDS:
+            declare(name, default)
 
     def snapshot(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
+        vals = self.registry._values
+        return {field: vals[name] for field, name, _default in _STATS_FIELDS}
+
+    def __repr__(self) -> str:
+        body = ", ".join(f"{k}={v!r}" for k, v in self.snapshot().items())
+        return f"Stats({body})"
+
+
+def _stats_property(name: str) -> property:
+    def _get(self: Stats) -> Any:
+        return self.registry._values[name]
+
+    def _set(self: Stats, value: Any) -> None:
+        self.registry._values[name] = value
+
+    return property(_get, _set)
+
+
+for _field, _name, _default in _STATS_FIELDS:
+    setattr(Stats, _field, _stats_property(_name))
+del _field, _name, _default
 
 
 @dataclasses.dataclass
@@ -183,6 +231,7 @@ class _Node:
     spill_free: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     spilled: int = 0                  # blocks currently spilled on this node
     spill_inflight: int = 0           # victims with a spill write in flight
+    compact_inflight: bool = False    # a compaction sweep op is on the disk
     spill_scan_at: float = -1.0       # last fruitless-scan timestamp guard
     # blocks owning their buffer (not views, not spilled/unread): kept
     # incrementally so the spill threshold check is O(1), not O(objects)
@@ -213,8 +262,10 @@ class Runtime:
         io_mode: str = "async",
         read_ahead: bool = True,
         spill_threshold: Optional[int] = None,
+        spill_compact_threshold: Optional[float] = None,
         shard_bits: int = GUID_SHARD_BITS,
         sanitize: Any = None,
+        monitor: Any = None,
     ):
         self.num_nodes = num_nodes
         self.net_latency = float(net_latency)
@@ -239,10 +290,18 @@ class Runtime:
         # buffer-resident data blocks, idle unlocked ones spill to the
         # node's spill file through the §5 IO queue (None disables)
         self.spill_threshold = spill_threshold
+        # on-line spill-file compaction: when a node's free-list holes
+        # exceed this fraction of its bump pointer, live slots rewrite
+        # through one IO-queue sweep and the tail shrinks (None disables)
+        self.spill_compact_threshold = spill_compact_threshold
         self.shard_bits = shard_bits
         self.nodes = [_Node(i, objects=ObjectTable(shard_bits))
                       for i in range(num_nodes)]
-        self.stats = Stats()
+        # one monitoring registry per runtime; Stats is a property view
+        # over it, so counters land in the registry whether or not the
+        # Monitor hooks below are enabled
+        self.registry = Registry()
+        self.stats = Stats(self.registry)
         self.clock = 0.0
         self._heap: List[Tuple[float, int, str, Any]] = []
         self._tick = itertools.count()
@@ -284,6 +343,16 @@ class Runtime:
         if mode not in ("", "0", "false", "none", "off"):
             from ..analysis.trace import Sanitizer
             self._san = Sanitizer(self, strict=mode in ("1", "strict"))
+        # --- monitoring (repro.monitoring): same wiring as the sanitizer —
+        # None when off, so live-gauge and histogram hook sites are one
+        # attribute check and virtual metrics stay bit-identical either way.
+        # The explicit parameter wins over REPRO_MONITOR.
+        if monitor is None:
+            monitor = os.environ.get("REPRO_MONITOR", "")
+        self._mon = None
+        mmode = str(monitor).lower()
+        if mmode not in ("", "0", "false", "none", "off"):
+            self._mon = Monitor(self.registry)
 
     def san_report(self):
         """The sanitizer's findings so far (``repro.analysis.SanitizerReport``).
@@ -499,6 +568,7 @@ class Runtime:
         self.stats.spilled_objects -= node.spilled
         node.spilled = 0
         node.spill_inflight = 0
+        node.compact_inflight = False
         node.resident_dbs = 0
         node.spill_tail = 0
         node.spill_free.clear()
@@ -622,6 +692,8 @@ class Runtime:
                           node, dep.node if isinstance(dep, Guid) else node)
         if edt.pending == 0 and edt.state == "created":
             edt.state = "ready"
+            if self._mon is not None:
+                edt.ready_time = self.clock
             self._try_grant(edt)
         return guid
 
@@ -751,6 +823,8 @@ class Runtime:
         edt.pending -= 1
         if edt.pending == 0:
             edt.state = "ready"
+            if self._mon is not None:
+                edt.ready_time = self.clock
             self._try_grant(edt)
 
     # -- locks & execution ---------------------------------------------------
@@ -1063,6 +1137,14 @@ class Runtime:
         self.stats.tasks_executed += 1
         end = edt.start_time + edt.duration + ctx.blocking_time
         edt.end_time = end
+        if self._mon is not None:
+            # per-EDT-class latency histograms: virtual time spent
+            # ready-but-ungranted, and the task's occupied window
+            self._mon.on_edt(
+                tmpl.func.__name__,
+                edt.start_time - edt.ready_time if edt.ready_time >= 0.0
+                else 0.0,
+                end - edt.start_time)
         heapq.heappush(self._heap, (end, next(self._tick), "task_end", (edt.guid, ret)))
 
     def _task_end(self, payload: Tuple[Guid, Any]) -> None:
@@ -1162,6 +1244,11 @@ class Runtime:
         node = self.nodes[node_idx]
         if not node.alive:
             return
+        if node.compact_inflight:
+            # a compaction sweep owns the file layout (it will clear the
+            # free list and shrink the tail at completion); new spills
+            # wait for the sweep's MIoDone rather than allocating into it
+            return
         # resident_dbs counts blocks owning their buffer (views alias a
         # parent's memory; spilled/unread/write_only/no_acquire hold none)
         # and is maintained incrementally, so this threshold check is O(1)
@@ -1227,6 +1314,8 @@ class Runtime:
         if merged and merged[-1][0] + merged[-1][1] == node.spill_tail:
             node.spill_tail = merged.pop()[0]
         node.spill_free = merged
+        if self.spill_compact_threshold is not None:
+            self._maybe_compact(node)
 
     def _spill_shard(self, node: _Node, victims: List[DbObj]) -> None:
         """Serialize cold blocks into the node's spill file through the §5
@@ -1294,6 +1383,93 @@ class Runtime:
             node.objects.note_spilled(gid)
             self.stats.spilled_objects += 1
         self._log("SPILLED", len(op.victims), "victims (op done)")
+
+    def _maybe_compact(self, node: _Node) -> None:
+        """On-line spill-file compaction (the ROADMAP 'remaining' item):
+        when the free-list holes exceed ``spill_compact_threshold`` as a
+        fraction of the bump pointer, submit one IO-queue sweep that will
+        rewrite every live slot packed from offset 0 and shrink the tail.
+
+        The plan is snapshotted at submit (guid, old offset, new offset,
+        size, version per victim) and only attempted when the node is
+        quiescent on the spill front — no spill writes in flight, no
+        unspill read pending on any live slot — so the sweep either
+        applies exactly or aborts wholesale at completion."""
+        thr = self.spill_compact_threshold
+        if (thr is None or node.compact_inflight or not node.alive
+                or node.spilled == 0 or node.spill_inflight > 0
+                or node.spill_path is None or node.spill_tail <= 0):
+            return
+        frag = sum(sz for _off, sz in node.spill_free)
+        if frag <= 0 or frag < thr * node.spill_tail:
+            return
+        live: List[DbObj] = []
+        for _idx, shard in node.objects.shards(ObjectKind.DATABLOCK):
+            for o in shard.objs.values():
+                if isinstance(o, DbObj) and o.spilled and not o.destroyed:
+                    if o.io_pending:
+                        return      # an unspill read is mid-flight: retry
+                    live.append(o)  # on the next release
+        if not live:
+            return
+        live.sort(key=lambda d: d.spill_offset)
+        plan: List[Tuple[Guid, int, int, int, int]] = []
+        cursor = 0
+        for db in live:
+            plan.append((db.guid, db.spill_offset, cursor, db.size,
+                         db.version))
+            cursor += db.size
+        if all(old == new for _g, old, new, _s, _v in plan):
+            return
+        node.compact_inflight = True
+        self.io.submit_compact(node.idx, node.spill_path, plan, cursor)
+        self._log("COMPACT", node.idx,
+                  f"{frag}B holes / {node.spill_tail}B tail,"
+                  f" {len(plan)} live slots")
+
+    def _finish_compact(self, op: Any) -> None:
+        """The compaction sweep's disk slot completed: re-verify the plan
+        (every victim still spilled at its snapshot offset and version,
+        no read in flight — any mismatch aborts the whole sweep, since a
+        concurrent unspill may be reading the old layout), then move live
+        slots down in offset order (moves are strictly downward, so
+        in-place is safe), clear the free list, and shrink the tail."""
+        node = self.nodes[op.node]
+        node.compact_inflight = False
+        if not node.alive or node.spill_path is None:
+            return
+        moves: List[Tuple[DbObj, int, int, int]] = []
+        for gid, old, new, size, version in op.victims:
+            db = self.try_lookup(gid)
+            if (db is None or not isinstance(db, DbObj) or not db.spilled
+                    or db.io_pending or db.spill_offset != old
+                    or db.version != version):
+                self._log("COMPACT abort", node.idx, gid)
+                # the layout changed under the sweep (a victim was
+                # destroyed or is being read back); re-plan immediately
+                # against the current free list — if a read is still in
+                # flight the re-plan defers to that read's release
+                self._maybe_compact(node)
+                return
+            moves.append((db, old, new, size))
+        for db, old, new, size in moves:
+            if new != old:
+                data = _read_file_region(node.spill_path, old, size)
+                _write_file_region(node.spill_path, new, data)
+                db.spill_offset = new
+        node.spill_free = []
+        node.spill_tail = op.size
+        try:
+            with open(node.spill_path, "r+b") as f:
+                f.truncate(op.size)
+        except OSError:
+            pass
+        self.stats.spill_compactions += 1
+        self._refresh_table_stats()
+        self._log("COMPACTED", node.idx, f"tail -> {op.size}B")
+        # spills deferred while the sweep was in flight can go now
+        node.spill_scan_at = -1.0
+        self._maybe_spill(node.idx)
 
     # -- destruction ---------------------------------------------------------
 
@@ -1650,6 +1826,8 @@ class Runtime:
             self._wake_waiters(db.guid)
         elif op.kind == "spill":
             self._finish_spill(op)
+        elif op.kind == "compact":
+            self._finish_compact(op)
         else:
             if not op.performed and op.data is not None:
                 _write_file_region(op.path, op.offset,

@@ -56,6 +56,12 @@ def main() -> None:
                          "archives spill to disk (0 = unlimited)")
     ap.add_argument("--static", action="store_true",
                     help="also run the static-batch baseline")
+    ap.add_argument("--monitor", action="store_true",
+                    help="print live monitoring-registry snapshots "
+                         "(queue depth, inflight IO, pages, sessions) "
+                         "at --monitor-every virtual-second intervals")
+    ap.add_argument("--monitor-every", type=float, default=0.01,
+                    metavar="S", help="snapshot interval, virtual seconds")
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -93,15 +99,32 @@ def main() -> None:
         for r in reqs:
             r.prompt = np.minimum(r.prompt, vocab - 1)
 
+    def _print_snap(t: float, snap: dict) -> None:
+        print(f"  [monitor t={t * 1e3:8.3f}ms] "
+              f"queued {snap['serve.queued']:.0f} "
+              f"active {snap['serve.active']:.0f} "
+              f"free_pages {snap['serve.free_pages']:.0f} "
+              f"io_inflight {snap.get('io.inflight_ops', 0):.0f} "
+              f"io_depth {snap.get('io.queue_depth', 0):.0f} "
+              f"spilled {snap.get('spill.objects', 0):.0f}")
+
     eng = ServeEngine(backend, b_cap=args.b_cap,
                       pool_pages=args.pool_pages, max_pages=args.max_pages,
-                      resident_budget=args.resident_budget or None)
+                      resident_budget=args.resident_budget or None,
+                      monitor=args.monitor or None,
+                      monitor_interval=args.monitor_every if args.monitor
+                      else 0.0,
+                      on_monitor=_print_snap if args.monitor else None)
     t0 = time.perf_counter()
     m = eng.run(reqs)
     wall = time.perf_counter() - t0
     print(f"continuous: {_fmt(m)}  "
           f"[evictions {m['evictions']:.0f}, resumes {m['resumes']:.0f}, "
           f"spilled {m['spilled_objects']:.0f}; wall {wall:.2f}s]")
+    if args.monitor:
+        print(f"monitor: {len(eng.monitor_snapshots)} snapshots; "
+              f"hist p99 latency {m['p99_hist_latency_s'] * 1e3:.2f}ms, "
+              f"hist p99 ttft {m['p99_hist_ttft_s'] * 1e3:.2f}ms")
     for r in reqs[: min(2, len(reqs))]:
         print(f"  req{r.rid}: {r.out}")
 

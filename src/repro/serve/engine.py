@@ -230,7 +230,11 @@ class ServeEngine:
     def __init__(self, backend, *, b_cap: int, pool_pages: int,
                  max_pages: int, resident_budget: Optional[int] = None,
                  io_latency: float = 2e-3, cost: Optional[StepCost] = None,
-                 sanitize: Any = None):
+                 sanitize: Any = None, monitor: Any = None,
+                 admit_max_inflight_io: Optional[int] = None,
+                 admit_max_queue_depth: Optional[int] = None,
+                 monitor_interval: float = 0.0,
+                 on_monitor: Optional[Any] = None):
         self.backend = backend
         self.b_cap = b_cap
         self.pool_pages = pool_pages
@@ -239,9 +243,22 @@ class ServeEngine:
         self.cost = cost or StepCost()
         self._eps = 1e-9
 
+        # IO backpressure admission gates (live registry values, PR 7
+        # follow-on: today's gates are free pages/slots only).  Setting
+        # either — or asking for interval snapshots — implies monitoring.
+        self.admit_max_inflight_io = admit_max_inflight_io
+        self.admit_max_queue_depth = admit_max_queue_depth
+        self.monitor_interval = float(monitor_interval)
+        self.on_monitor = on_monitor
+        if monitor is None and (admit_max_inflight_io is not None
+                                or admit_max_queue_depth is not None
+                                or monitor_interval > 0.0):
+            monitor = True
+
         self.rt = Runtime(spill_threshold=resident_budget,
                           io_latency=io_latency, shard_bits=4,
-                          sanitize=sanitize)
+                          sanitize=sanitize, monitor=monitor)
+        self.registry = self.rt.registry
         self.ctx = TaskCtx(self.rt, 0, None)
         self.cache_db, _ = self.ctx.db_create(pool_pages * backend.page_bytes)
         self.slot_map = self.ctx.map_create(b_cap, _slot_creator,
@@ -261,6 +278,9 @@ class ServeEngine:
         self.resumes = 0
         self.peak_spilled = 0
         self._resume_ready: Dict[int, bytes] = {}
+        self.deferred_admissions = 0
+        self.monitor_snapshots: List[Dict[str, float]] = []
+        self._admit_queue: Optional[deque] = None
 
     # -- time / DES glue ----------------------------------------------------
 
@@ -268,6 +288,55 @@ class ServeEngine:
         """Sanitizer findings for the engine's runtime (needs
         ``sanitize=`` at construction or ``REPRO_SANITIZE`` set)."""
         return self.rt.san_report()
+
+    # -- monitoring ----------------------------------------------------------
+
+    def monitor(self) -> Dict[str, float]:
+        """Mid-run snapshot of the whole monitoring registry.
+
+        Callable from inside ``run()`` (via ``monitor_interval`` /
+        ``on_monitor``) or between calls: refreshes the live ``io.*``
+        gauges to the current virtual instant, stamps the engine's own
+        ``serve.*`` gauges, and returns ``Registry.snapshot()`` — no
+        virtual time passes, nothing stops.
+        """
+        reg = self.rt.registry
+        if self.rt._mon is not None:
+            self.rt._mon.on_io(self.rt.io)
+        reg.set("serve.time_s", self.t)
+        reg.set("serve.queued",
+                0 if self._admit_queue is None else len(self._admit_queue))
+        reg.set("serve.sessions", len(self.sessions))
+        reg.set("serve.active",
+                sum(1 for s in self.sessions.values()
+                    if s.state == "running"))
+        reg.set("serve.free_pages", len(self.free_pages))
+        reg.set("serve.free_slots", len(self.free_slots))
+        reg.set("serve.evictions", self.evictions)
+        reg.set("serve.resumes", self.resumes)
+        reg.set("serve.deferred_admissions", self.deferred_admissions)
+        return reg.snapshot()
+
+    def _io_backpressured(self) -> bool:
+        """The live-registry admission gate: defer admissions while the
+        IO plane is saturated (ops in flight / queued behind the disk
+        past the configured bounds), even when pages and a slot are
+        free — the page/slot-only gate would admit into the backlog."""
+        if (self.admit_max_inflight_io is None
+                and self.admit_max_queue_depth is None):
+            return False
+        if self.rt._mon is not None:
+            self.rt._mon.on_io(self.rt.io)
+        reg = self.rt.registry
+        if (self.admit_max_inflight_io is not None
+                and reg.value("io.inflight_ops")
+                > self.admit_max_inflight_io):
+            return True
+        if (self.admit_max_queue_depth is not None
+                and reg.value("io.queue_depth")
+                > self.admit_max_queue_depth):
+            return True
+        return False
 
     def _flush(self) -> None:
         """Drain runtime events up to the engine clock, then pin the DES
@@ -348,6 +417,9 @@ class ServeEngine:
         sess.last_tok = first
         req.out.append(first)
         req.t_first = self.t
+        if self.rt._mon is not None:
+            self.rt.registry.histogram("serve.ttft_s").observe(
+                self.t - req.arrival)
         self.cur_lens[slot] = plen
         self.tokens[slot] = first
         self.rids[slot] = req.rid
@@ -359,6 +431,9 @@ class ServeEngine:
 
     def _retire(self, sess: _Session) -> None:
         sess.req.t_done = self.t
+        if self.rt._mon is not None:
+            self.rt.registry.histogram("serve.latency_s").observe(
+                self.t - sess.req.arrival)
         self._release_pages(sess)
         self.active[sess.slot] = False
         self.cur_lens[sess.slot] = 0
@@ -439,11 +514,19 @@ class ServeEngine:
     def run(self, requests: List[Request]) -> Dict[str, float]:
         pending = deque(sorted(requests, key=lambda r: r.arrival))
         queued: deque = deque()
+        self._admit_queue = queued
+        next_snap = 0.0
         n_done = 0
         total = len(requests)
 
         while n_done < total:
             self._flush()
+            if self.monitor_interval > 0.0 and self.t >= next_snap:
+                snap = self.monitor()
+                self.monitor_snapshots.append(snap)
+                if self.on_monitor is not None:
+                    self.on_monitor(self.t, snap)
+                next_snap = self.t + self.monitor_interval
             while pending and pending[0].arrival <= self.t:
                 queued.append(pending.popleft())
 
@@ -457,6 +540,13 @@ class ServeEngine:
 
             # admissions: prefill interleaves with the running batch
             while queued and self.free_slots:
+                if self._io_backpressured():
+                    # pages and a slot may be free — the page/slot-only
+                    # gate would admit — but the IO plane is saturated:
+                    # defer until the backlog drains (its MIoDone events
+                    # guarantee forward progress below)
+                    self.deferred_admissions += 1
+                    break
                 req = queued.popleft()
                 need = (len(req.prompt) + self.page - 1) // self.page
                 if (len(self.free_pages) < need + 1
@@ -528,7 +618,7 @@ class ServeEngine:
         lat = np.array([r.t_done - r.arrival for r in requests])
         tokens = sum(r.gen for r in requests)
         stats = self.rt.stats
-        return {
+        out = {
             "tokens": float(tokens),
             "makespan_s": float(self.t),
             "tok_per_s": tokens / max(self.t, 1e-12),
@@ -539,7 +629,18 @@ class ServeEngine:
             "spilled_objects": float(self.peak_spilled),
             "creator_calls": float(stats.creator_calls),
             "spill_slots_reused": float(stats.spill_slots_reused),
+            "deferred_admissions": float(self.deferred_admissions),
         }
+        if self.rt._mon is not None:
+            # histogram-sourced quantiles: measured distributions over
+            # every retirement, not the two-point np.percentile summary
+            reg = self.rt.registry
+            lat_h = reg.histogram("serve.latency_s")
+            ttft_h = reg.histogram("serve.ttft_s")
+            out["p50_hist_latency_s"] = lat_h.quantile(0.50)
+            out["p99_hist_latency_s"] = lat_h.quantile(0.99)
+            out["p99_hist_ttft_s"] = ttft_h.quantile(0.99)
+        return out
 
 
 # ----------------------------------------------------------- static baseline

@@ -122,6 +122,16 @@ class Trainer:
             m["step"] = i
             m["step_time"] = dt
             self.history.append(m)
+            # stamp step metrics into the monitoring registry: the train.*
+            # namespace is live alongside the runtime's io.*/spill.* gauges,
+            # which is what an elastic supervisor would watch mid-run
+            reg = rt.registry
+            reg.set("train.step", float(i))
+            reg.set("train.loss", m.get("loss", 0.0))
+            reg.set("train.step_time_s", dt)
+            reg.inc("train.steps")
+            if rt._mon is not None:
+                reg.histogram("train.step_wall_s").observe(dt)
             if tc.ckpt_every and tc.ckpt_dir and (i + 1) % tc.ckpt_every == 0:
                 # checkpoint hangs off this step's event; §5 chunked write,
                 # §3 issue-now/resolve-later.  async_ckpt snapshots at
@@ -176,4 +186,5 @@ class Trainer:
                 last.get("moe_overflow_rate", 0.0))
             rt.stats.moe_a2a_bytes = int(last.get("moe_a2a_bytes", 0))
         self.last_runtime_stats = rt.stats
+        self.registry = rt.registry
         return holder["state"]

@@ -401,3 +401,45 @@ def test_race_detector_unit():
     assert hit is not None and hit[0].label == "w1"
     d.drop_root(root)
     assert d.history_len(root) == 0
+
+
+# ------------------------------------------------------- trace export
+
+
+def test_export_trace_jsonl_round_trips(tmp_path):
+    """``Sanitizer.export_trace`` dumps the structured event ring as
+    JSONL; ``load_trace`` reconstructs it exactly — Guids (kind tag
+    included), Lids, nested tuples and floats all survive the trip."""
+    from repro.analysis import load_trace
+
+    rt = Runtime(num_nodes=2, sanitize=True)
+
+    def thief(paramv, depv, api):
+        api.db_destroy(paramv[0])     # LID escape: Lid payloads in events
+        return NULL_GUID
+
+    def main(paramv, depv, api):
+        x, xb = api.db_create(64)
+        y, yb = api.db_create(64)
+        yb[:] = 7
+        api.db_copy(x, 0, y, 0, 32)   # copy events carry (guid, lo, hi)
+        lid, _ = api.db_create(16, props=EDT_PROP_LID, placement=1)
+        tmpl = api.edt_template_create(thief, 1, 0)
+        api.edt_create(tmpl, paramv=[lid])
+        return NULL_GUID
+
+    spawn_main(rt, main)
+    rt.run()
+    events = list(rt._san.trace_events)
+    assert events, "workload produced no trace events"
+    path = tmp_path / "trace.jsonl"
+    n = rt._san.export_trace(str(path))
+    assert n == len(events)
+    assert len(path.read_text().splitlines()) == n
+    loaded = load_trace(str(path))
+    assert loaded == events
+    # spot the payload shapes actually round-tripped, not just compared
+    kinds = {ev[1] for ev in loaded}
+    assert "copy" in kinds or "db_create" in kinds, kinds
+    # the seeded LID escape put a Lid in the stream; consume the finding
+    assert rt.san_report().kinds().get(LID_ESCAPE, 0) == 1

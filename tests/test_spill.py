@@ -482,3 +482,108 @@ def test_spill_roundtrip_sync_io_mode():
     assert stats.spilled_objects == 0
     for g, payload in made:
         assert seen[g] == payload
+
+
+def test_spill_compaction_packs_file_and_unspills_bit_exact():
+    """On-line compaction (spill_compact_threshold): destroying spilled
+    blocks punches holes; past the frag fraction one IO-queue sweep
+    rewrites the live slots packed from 0, shrinks the bump pointer, and
+    the survivors still unspill bit-exact."""
+    rt = _mk_runtime(spill_threshold=2, spill_compact_threshold=0.3)
+    made = []
+
+    def maker(paramv, depv, api):
+        made.extend(_make_dbs(api, 8))
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    stats = rt.run()
+    assert stats.spilled_objects == 6
+    node = rt.nodes[0]
+    tail_before = node.spill_tail
+    assert tail_before == 6 * 16
+    # destroy three spilled victims: holes accumulate until the 0.3
+    # fraction trips and a compaction sweep is submitted
+    spilled = [g for g, _ in made if rt.lookup(g).spilled]
+    for g in spilled[:3]:
+        rt.destroy(g)
+    rt.run()       # drain the sweep's MIoDone
+    assert stats.spill_compactions >= 1
+    assert rt.registry.value("spill.compactions") == stats.spill_compactions
+    # live slots are packed from 0, free list empty, tail shrunk, and the
+    # frag gauge dropped to zero
+    live = [rt.lookup(g) for g in spilled[3:]]
+    assert sorted(db.spill_offset for db in live) == [0, 16, 32]
+    assert node.spill_free == []
+    assert node.spill_tail == 3 * 16
+    assert stats.spill_frag_bytes == 0
+    assert os.path.getsize(node.spill_path) == 3 * 16
+
+    # bit-exact unspill of every survivor through the ordinary grant path
+    rt.spill_threshold = None
+    seen = {}
+
+    def reader(paramv, depv, api):
+        seen[depv[0].guid] = bytes(depv[0].ptr)
+        return NULL_GUID
+
+    def phase2(paramv, depv, api):
+        tmpl = api.edt_template_create(reader, 0, 1)
+        for g, _ in made:
+            if rt.try_lookup(g) is not None:
+                api.edt_create(tmpl, depv=[g], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, phase2)
+    rt.run()
+    survivors = {g for g, _ in made} - set(spilled[:3])
+    assert set(seen) == survivors
+    for g, payload in made:
+        if g in seen:
+            assert seen[g] == payload
+    _assert_resident_counter_consistent(rt)
+
+
+def test_spill_compaction_aborts_when_victim_read_inflight():
+    """A compaction sweep completing while an unspill read is in flight
+    for one of its victims must abort wholesale (the reader consumes the
+    old layout); the retrigger on a later release compacts cleanly."""
+    if L == 0.0:
+        pytest.skip("needs a nonzero IO window to race the sweep")
+    rt = _mk_runtime(spill_threshold=2, spill_compact_threshold=0.1)
+    made = []
+
+    def maker(paramv, depv, api):
+        made.extend(_make_dbs(api, 8))
+        return NULL_GUID
+
+    spawn_main(rt, maker)
+    rt.run()
+    spilled = [g for g, _ in made if rt.lookup(g).spilled]
+    # punch a hole (submits the sweep) and, inside the sweep's disk
+    # window, acquire a spilled victim so its unspill read is in flight
+    # when the sweep completes
+    rt.destroy(spilled[0])
+    assert rt.nodes[0].compact_inflight
+    seen = {}
+
+    def reader(paramv, depv, api):
+        seen[depv[0].guid] = bytes(depv[0].ptr)
+        return NULL_GUID
+
+    def phase2(paramv, depv, api):
+        tmpl = api.edt_template_create(reader, 0, 1)
+        api.edt_create(tmpl, depv=[spilled[1]], dep_modes=[DbMode.RO])
+        return NULL_GUID
+
+    spawn_main(rt, phase2)
+    stats = rt.run()
+    # the racing sweep aborted; the unspill (and its release of the
+    # victim's slot) retriggered a clean one — payloads stay bit-exact
+    assert seen[spilled[1]] == dict(made)[spilled[1]]
+    assert stats.spill_compactions >= 1
+    assert rt.nodes[0].spill_free == []
+    for g in spilled[2:]:
+        db = rt.lookup(g)
+        assert db.spilled and 0 <= db.spill_offset < rt.nodes[0].spill_tail
+    _assert_resident_counter_consistent(rt)
